@@ -1,0 +1,46 @@
+"""Shared benchmark scaffolding: sizes scaled for the 1-core CPU container.
+
+Each benchmark mirrors one paper table/figure; results are printed as
+``name,us_per_call,derived`` CSV rows and persisted to experiments/bench/.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+EXPERIMENTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+
+# CPU-scaled Higgs stand-in (paper uses 11M x 28 on a Titan V)
+HIGGS_ROWS = 12000
+HIGGS_EVAL_ROWS = 3000
+N_TREES = 40
+MAX_DEPTH = 6
+MAX_BIN = 64
+PAGE_BYTES = 64 * 1024  # small pages so the out-of-core path really pages
+
+
+def save_result(name: str, payload: dict) -> None:
+    os.makedirs(EXPERIMENTS_DIR, exist_ok=True)
+    payload = dict(payload)
+    payload["name"] = name
+    payload["timestamp"] = time.strftime("%Y-%m-%d %H:%M:%S")
+    with open(os.path.join(EXPERIMENTS_DIR, f"{name}.json"), "w") as fh:
+        json.dump(payload, fh, indent=1)
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"
+
+
+def higgs_sources(batch_rows: int = 2048):
+    from repro.data.synthetic import SyntheticSource
+
+    train = SyntheticSource(
+        n_rows=HIGGS_ROWS, num_features=28, batch_rows=batch_rows, task="higgs", seed=42
+    )
+    evals = SyntheticSource(
+        n_rows=HIGGS_EVAL_ROWS, num_features=28, batch_rows=batch_rows, task="higgs",
+        seed=42, batch_offset=10_000,
+    )
+    return train, evals

@@ -1,0 +1,69 @@
+"""Kernel microbenchmarks: jnp oracle per-call latency on this host, plus
+arithmetic-intensity accounting for the TPU one-hot MXU histogram design.
+
+Wall-times here are CPU (oracle) numbers — the TPU kernel is validated in
+interpret mode for correctness and characterized analytically (§Roofline);
+the derived column reports the MXU-formulation arithmetic intensity.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, save_result
+from repro.kernels import ops
+
+
+def _bench(fn, *args, iters=10) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main(quick: bool = False) -> list[str]:
+    rng = np.random.default_rng(0)
+    n, m, B, N = 65536, 32, 64, 8
+    bins = jnp.asarray(rng.integers(0, B, (n, m)).astype(np.int32))
+    g = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    h = jnp.asarray(rng.random(n).astype(np.float32))
+    pos = jnp.asarray(rng.integers(0, N, n).astype(np.int32))
+
+    us_hist = _bench(lambda: ops.build_histogram(bins, g, h, pos, N, B, impl="ref"))
+    rows_per_s = n / (us_hist / 1e6)
+
+    # one-hot MXU formulation: FLOPs = 2 * R * (N + N*F*B_onehot-contraction)
+    flops = 2 * n * N * m * B * 2  # two dots: (N,R)x(R,F*B) for g and h
+    bytes_moved = bins.nbytes + g.nbytes + h.nbytes + pos.nbytes + N * m * B * 2 * 4
+    intensity = flops / bytes_moved
+
+    x = jnp.asarray(rng.normal(size=(n, m)).astype(np.float32))
+    edges = jnp.asarray(np.sort(rng.normal(size=(m, B)).astype(np.float32), axis=1))
+    nbf = jnp.full((m,), B, jnp.int32)
+    us_bin = _bench(lambda: ops.bin_values(x, edges, nbf, impl="ref"))
+
+    feat = jnp.asarray(rng.integers(0, m, 2 * N + 1).astype(np.int32))
+    sb = jnp.asarray(rng.integers(0, B, 2 * N + 1).astype(np.int32))
+    dl = jnp.asarray(rng.random(2 * N + 1) < 0.5)
+    lf = jnp.asarray(rng.random(2 * N + 1) < 0.2)
+    us_part = _bench(lambda: ops.partition_rows(bins, pos, feat, sb, dl, lf, impl="ref"))
+
+    save_result("kernel_bench", {
+        "histogram_us": us_hist, "bin_values_us": us_bin, "partition_us": us_part,
+        "histogram_rows_per_s": rows_per_s, "mxu_arithmetic_intensity": intensity,
+    })
+    return [
+        csv_row("kernel_histogram", us_hist, f"rows_per_s={rows_per_s:.0f}"),
+        csv_row("kernel_bin_values", us_bin, f"n={n}"),
+        csv_row("kernel_partition", us_part, f"n={n}"),
+        csv_row("kernel_hist_mxu_intensity", 0.0, f"{intensity:.1f}_flops_per_byte"),
+    ]
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

@@ -1,0 +1,48 @@
+"""Benchmark harness: one entry per paper table/figure (+ kernels).
+
+Prints ``name,us_per_call,derived`` CSV. ``--quick`` shrinks sweeps.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None, help="comma-separated benchmark names")
+    args = ap.parse_args()
+
+    from benchmarks import kernel_bench, max_data_size, sampling_methods
+    from benchmarks import training_curves, training_time
+
+    table = {
+        "table1_max_data_size": max_data_size.main,
+        "table2_training_time": training_time.main,
+        "fig1_training_curves": training_curves.main,
+        "sampling_methods": sampling_methods.main,
+        "kernel_bench": kernel_bench.main,
+    }
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in table.items():
+        if only and name not in only:
+            continue
+        t0 = time.perf_counter()
+        try:
+            for row in fn(quick=args.quick):
+                print(row, flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},-1,ERROR:{type(e).__name__}:{e}", flush=True)
+        print(f"# {name} took {time.perf_counter()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(failures)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Paged-KV serving demo (the paper's page idea applied to decode memory).
+
+Prefills a batch of prompts into a PAGED KV cache, then decodes greedily,
+comparing against the contiguous-cache path (identical logits).
+
+    PYTHONPATH=src python examples/serve_paged.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.models.serve import decode_step, prefill
+from repro.models.transformer import init_params
+
+
+def main():
+    cfg = get_config("llama3.2-1b", reduced=True)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    B, S, steps = 4, 48, 16
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+
+    logits_p, cache_paged = prefill(params, cfg, prompts, max_len=S + steps, paged=True)
+    logits_c, cache_cont = prefill(params, cfg, prompts, max_len=S + steps, paged=False)
+    print("prefill logits agree:",
+          float(jnp.abs(logits_p - logits_c).max()) < 1e-3)
+
+    dec_paged = jax.jit(lambda t, c: decode_step(params, cfg, t, c))
+    dec_cont = jax.jit(lambda t, c: decode_step(params, cfg, t, c))
+    tok_p = tok_c = jnp.argmax(logits_p, axis=-1).astype(jnp.int32)
+    agree = True
+    outs = [tok_p]
+    for _ in range(steps):
+        lp, cache_paged = dec_paged(tok_p, cache_paged)
+        lc, cache_cont = dec_cont(tok_c, cache_cont)
+        tok_p = jnp.argmax(lp, axis=-1).astype(jnp.int32)
+        tok_c = jnp.argmax(lc, axis=-1).astype(jnp.int32)
+        agree &= bool(jnp.all(tok_p == tok_c))
+        outs.append(tok_p)
+    print(f"decoded {steps} tokens; paged == contiguous greedy path: {agree}")
+    print("sample continuation (seq 0):", [int(t[0]) for t in outs])
+    print("paged cache pages:", cache_paged.k_pages.shape[1],
+          f"(page_size={cache_paged.page_size})")
+
+
+if __name__ == "__main__":
+    main()

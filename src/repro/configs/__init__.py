@@ -1,0 +1,13 @@
+from repro.configs.registry import ALL_ARCHS, LM_ARCHS, get_config, get_module
+from repro.configs.shapes import SHAPES, ShapeSpec, applicable, input_specs
+
+__all__ = [
+    "ALL_ARCHS",
+    "LM_ARCHS",
+    "get_config",
+    "get_module",
+    "SHAPES",
+    "ShapeSpec",
+    "applicable",
+    "input_specs",
+]

@@ -1,0 +1,65 @@
+"""Core GBDT library: the paper's contribution (out-of-core gradient boosting)."""
+from repro.core.booster import BoosterParams, GradientBooster, train_in_core
+from repro.core.ellpack import (
+    DEFAULT_PAGE_BYTES,
+    MISSING_BIN,
+    EllpackMatrix,
+    EllpackPage,
+    bin_batch,
+    compact,
+    create_ellpack_inmemory,
+    create_ellpack_pages,
+)
+from repro.core.memory import DeviceMemoryModel
+from repro.core.objectives import LOGISTIC, SQUARED_ERROR, get_objective
+from repro.core.outofcore import ExternalGradientBooster
+from repro.core.quantile import HistogramCuts, QuantileSketch, sketch_dense
+from repro.core.sampling import SamplingConfig, estimate_mvs_lambda, mvs_threshold, sample
+from repro.core.split import SplitParams, evaluate_splits, leaf_weight
+from repro.core.tree import (
+    TreeArrays,
+    TreeParams,
+    grow_tree,
+    grow_tree_generic,
+    predict_forest_raw,
+    predict_tree_bins,
+    predict_tree_raw,
+    stack_trees,
+)
+
+__all__ = [
+    "BoosterParams",
+    "GradientBooster",
+    "train_in_core",
+    "ExternalGradientBooster",
+    "DEFAULT_PAGE_BYTES",
+    "MISSING_BIN",
+    "EllpackMatrix",
+    "EllpackPage",
+    "bin_batch",
+    "compact",
+    "create_ellpack_inmemory",
+    "create_ellpack_pages",
+    "DeviceMemoryModel",
+    "LOGISTIC",
+    "SQUARED_ERROR",
+    "get_objective",
+    "HistogramCuts",
+    "QuantileSketch",
+    "sketch_dense",
+    "SamplingConfig",
+    "estimate_mvs_lambda",
+    "mvs_threshold",
+    "sample",
+    "SplitParams",
+    "evaluate_splits",
+    "leaf_weight",
+    "TreeArrays",
+    "TreeParams",
+    "grow_tree",
+    "grow_tree_generic",
+    "predict_forest_raw",
+    "predict_tree_bins",
+    "predict_tree_raw",
+    "stack_trees",
+]

@@ -1,0 +1,257 @@
+"""GradientBooster: in-core training facade (paper §2.1/2.2 baseline).
+
+The in-core path quantizes the whole matrix as one ELLPACK page resident on
+device and runs Alg. 1 per boosting round. Sampling (SGB/GOSS/MVS) is applied
+as a gradient mask — numerically identical to compact-and-build (the histogram
+only sees sampled rows' gradients) while keeping shapes static.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import objectives as obj_lib
+from repro.core.ellpack import EllpackMatrix, create_ellpack_inmemory
+from repro.core.quantile import HistogramCuts
+from repro.core.sampling import SamplingConfig, sample
+from repro.core.split import SplitParams
+from repro.core.tree import (
+    TreeArrays,
+    TreeParams,
+    grow_tree,
+    predict_tree_bins,
+    stack_trees,
+)
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class BoosterParams:
+    n_estimators: int = 100
+    learning_rate: float = 0.3
+    max_depth: int = 6
+    reg_lambda: float = 1.0
+    gamma: float = 0.0
+    min_child_weight: float = 1.0
+    max_bin: int = 256
+    objective: str = "reg:squarederror"
+    sampling: SamplingConfig = dataclasses.field(default_factory=SamplingConfig)
+    base_score: float | None = None
+    seed: int = 0
+    kernel_impl: str = "auto"  # auto | pallas | ref
+    early_stopping_rounds: int | None = None
+
+    def tree_params(self) -> TreeParams:
+        return TreeParams(
+            max_depth=self.max_depth,
+            split=SplitParams(
+                reg_lambda=self.reg_lambda,
+                gamma=self.gamma,
+                min_child_weight=self.min_child_weight,
+            ),
+        )
+
+
+def bin_valid_from_cuts(cuts: HistogramCuts, n_bins: int) -> jnp.ndarray:
+    nbf = cuts.n_bins_per_feature
+    mask = np.zeros((cuts.num_features, n_bins), dtype=bool)
+    for f, k in enumerate(nbf):
+        mask[f, : int(k)] = True
+    return jnp.asarray(mask)
+
+
+@dataclasses.dataclass
+class EvalRecord:
+    iteration: int
+    metric: str
+    value: float
+    elapsed_s: float
+
+
+class GradientBooster:
+    """XGBoost-like estimator over the JAX tree builder."""
+
+    def __init__(self, params: BoosterParams | None = None, **kwargs):
+        if params is None:
+            params = BoosterParams(**kwargs)
+        elif kwargs:
+            params = dataclasses.replace(params, **kwargs)
+        self.params = params
+        self.objective = obj_lib.get_objective(params.objective)
+        self.trees: list[TreeArrays] = []
+        self.cuts: HistogramCuts | None = None
+        self.base_margin_: float = 0.0
+        self.eval_history: list[EvalRecord] = []
+        self._rng = jax.random.PRNGKey(params.seed)
+
+    # ------------------------------------------------------------------ fit
+    def fit(
+        self,
+        X: np.ndarray,
+        y: np.ndarray,
+        eval_set: tuple[np.ndarray, np.ndarray] | None = None,
+        eval_metric: str = "auto",
+        verbose: bool = False,
+        cuts: HistogramCuts | None = None,
+    ) -> "GradientBooster":
+        p = self.params
+        y = np.asarray(y, dtype=np.float32)
+        ell: EllpackMatrix = create_ellpack_inmemory(
+            X, max_bin=min(p.max_bin, 255), cuts=cuts
+        )
+        self.cuts = ell.cuts
+        n_bins = min(p.max_bin, 255)
+        bin_valid = bin_valid_from_cuts(ell.cuts, n_bins)
+        bins = jnp.asarray(ell.single_page().bins.astype(np.int32))
+        labels = jnp.asarray(y)
+
+        self.base_margin_ = (
+            p.base_score if p.base_score is not None else self.objective.base_margin(y)
+        )
+        margin = jnp.full(y.shape[0], self.base_margin_, jnp.float32)
+
+        eval_bins = eval_labels = None
+        eval_margin = None
+        if eval_set is not None:
+            from repro.core.ellpack import bin_batch
+
+            eval_bins = jnp.asarray(bin_batch(eval_set[0], ell.cuts).astype(np.int32))
+            eval_labels = np.asarray(eval_set[1], dtype=np.float32)
+            eval_margin = jnp.full(eval_labels.shape[0], self.base_margin_, jnp.float32)
+        metric_name = self._metric_name(eval_metric)
+
+        tp = p.tree_params()
+        t0 = time.perf_counter()
+        best_metric, best_iter = None, -1
+        for it in range(p.n_estimators):
+            g, h = self.objective.grad_hess(margin, labels)
+            self._rng, k = jax.random.split(self._rng)
+            mask, w = sample(k, g, h, p.sampling)
+            scale = jnp.where(mask, w, 0.0)
+            res = grow_tree(
+                bins,
+                g * scale,
+                h * scale,
+                n_bins,
+                bin_valid,
+                tp,
+                cut_values=ell.cuts.values,
+                cut_ptrs=ell.cuts.ptrs,
+                impl=p.kernel_impl,
+            )
+            self.trees.append(res.tree)
+            margin = margin + p.learning_rate * res.tree.leaf_value[res.positions]
+            if eval_bins is not None:
+                pred = predict_tree_bins(res.tree, eval_bins, tp.max_depth)
+                eval_margin = eval_margin + p.learning_rate * pred
+                val = self._eval(metric_name, eval_labels, eval_margin)
+                self.eval_history.append(
+                    EvalRecord(it, metric_name, val, time.perf_counter() - t0)
+                )
+                if verbose:
+                    print(f"[{it}] {metric_name}={val:.6f}")
+                better = (
+                    best_metric is None
+                    or (metric_name in ("auc", "accuracy") and val > best_metric)
+                    or (metric_name not in ("auc", "accuracy") and val < best_metric)
+                )
+                if better:
+                    best_metric, best_iter = val, it
+                elif (
+                    p.early_stopping_rounds
+                    and it - best_iter >= p.early_stopping_rounds
+                ):
+                    break
+        self.best_iteration_ = best_iter if best_iter >= 0 else len(self.trees) - 1
+        return self
+
+    def _metric_name(self, eval_metric: str) -> str:
+        if eval_metric != "auto":
+            return eval_metric
+        return "auc" if self.objective.name == "binary:logistic" else "rmse"
+
+    def _eval(self, metric: str, labels: np.ndarray, margin: Array) -> float:
+        preds = np.asarray(self.objective.transform(margin))
+        if metric == "rmse":
+            return obj_lib.rmse(labels, preds)
+        return obj_lib.METRICS[metric](labels, preds)
+
+    # -------------------------------------------------------------- predict
+    def predict_margin(self, X: np.ndarray, iteration_range: tuple[int, int] | None = None) -> np.ndarray:
+        from repro.core.ellpack import bin_batch
+
+        assert self.cuts is not None, "not fitted"
+        bins = jnp.asarray(bin_batch(np.asarray(X), self.cuts).astype(np.int32))
+        lo, hi = iteration_range or (0, len(self.trees))
+        margin = jnp.full(X.shape[0], self.base_margin_, jnp.float32)
+        md = self.params.max_depth
+        for tree in self.trees[lo:hi]:
+            margin = margin + self.params.learning_rate * predict_tree_bins(tree, bins, md)
+        return np.asarray(margin)
+
+    def predict(self, X: np.ndarray, output_margin: bool = False) -> np.ndarray:
+        margin = self.predict_margin(X)
+        if output_margin:
+            return margin
+        return np.asarray(self.objective.transform(jnp.asarray(margin)))
+
+    # ----------------------------------------------------------- checkpoint
+    def save(self, path: str) -> None:
+        """Checkpoint the forest + quantization state (restartable training)."""
+        os.makedirs(path, exist_ok=True)
+        forest = stack_trees(self.trees) if self.trees else None
+        arrays = {}
+        if forest is not None:
+            arrays = {f: np.asarray(getattr(forest, f)) for f in forest._fields}
+        assert self.cuts is not None
+        np.savez_compressed(
+            os.path.join(path, "model.npz"),
+            cut_values=self.cuts.values,
+            cut_ptrs=self.cuts.ptrs,
+            cut_min_vals=self.cuts.min_vals,
+            rng=np.asarray(self._rng),
+            **{f"tree_{k}": v for k, v in arrays.items()},
+        )
+        meta = dataclasses.asdict(self.params)
+        meta["sampling"] = dataclasses.asdict(self.params.sampling)
+        meta["base_margin_"] = self.base_margin_
+        meta["n_trees"] = len(self.trees)
+        with open(os.path.join(path, "booster.json"), "w") as fh:
+            json.dump(meta, fh, indent=2)
+
+    @classmethod
+    def load(cls, path: str) -> "GradientBooster":
+        with open(os.path.join(path, "booster.json")) as fh:
+            meta = json.load(fh)
+        base_margin = meta.pop("base_margin_")
+        n_trees = meta.pop("n_trees")
+        sampling = SamplingConfig(**meta.pop("sampling"))
+        params = BoosterParams(sampling=sampling, **meta)
+        self = cls(params)
+        data = np.load(os.path.join(path, "model.npz"))
+        self.cuts = HistogramCuts(
+            values=data["cut_values"], ptrs=data["cut_ptrs"], min_vals=data["cut_min_vals"]
+        )
+        self.base_margin_ = float(base_margin)
+        self._rng = jnp.asarray(data["rng"])
+        if n_trees:
+            fields = TreeArrays._fields
+            stacked = [jnp.asarray(data[f"tree_{f}"]) for f in fields]
+            self.trees = [
+                TreeArrays(*[a[i] for a in stacked]) for i in range(n_trees)
+            ]
+        return self
+
+
+def train_in_core(
+    X: np.ndarray, y: np.ndarray, params: BoosterParams | None = None, **kw
+) -> GradientBooster:
+    return GradientBooster(params, **kw).fit(X, y)

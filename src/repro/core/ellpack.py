@@ -1,0 +1,179 @@
+"""ELLPACK quantized matrix + external pages (paper Alg. 4 / Alg. 5 / Compact of Alg. 7).
+
+Features are quantized to per-feature-local bin indices using HistogramCuts and
+stored dense (ELLPACK: fixed row width = num_features) in uint8. Bin 255 is the
+missing sentinel (XGBoost's ELLPACK reserves a null gidx the same way), so each
+feature has at most 255 real bins.
+
+In external-memory mode the matrix is a sequence of fixed-budget pages
+(default 32 MiB, the paper's page size); `compact` gathers a sampled subset of
+rows from many pages into one device-resident page (the Compact step that makes
+Alg. 7 fast).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Iterator, Sequence
+
+import numpy as np
+
+from repro.core.quantile import HistogramCuts, QuantileSketch
+
+MISSING_BIN = 255
+DEFAULT_PAGE_BYTES = 32 * 1024 * 1024  # paper: 32 MiB pages
+
+
+def bin_batch(X: np.ndarray, cuts: HistogramCuts) -> np.ndarray:
+    """Quantize a dense batch to local bin indices (host oracle for Alg. 4).
+
+    bin(x) = clip(searchsorted(edges_f, x, side='left'), 0, n_bins_f - 1);
+    NaN -> MISSING_BIN.
+    """
+    X = np.asarray(X)
+    n, m = X.shape
+    out = np.empty((n, m), dtype=np.uint8)
+    for f in range(m):
+        edges = cuts.feature_edges(f)
+        col = X[:, f]
+        b = np.searchsorted(edges, col, side="left")
+        b = np.clip(b, 0, max(len(edges) - 1, 0)).astype(np.uint8)
+        b[np.isnan(col)] = MISSING_BIN
+        out[:, f] = b
+    return out
+
+
+@dataclasses.dataclass
+class EllpackPage:
+    """One fixed-row-width page of quantized features."""
+
+    bins: np.ndarray  # (n_rows, num_features) uint8
+    row_offset: int = 0  # global index of first row
+
+    @property
+    def n_rows(self) -> int:
+        return self.bins.shape[0]
+
+    @property
+    def num_features(self) -> int:
+        return self.bins.shape[1]
+
+    @property
+    def nbytes(self) -> int:
+        return self.bins.nbytes
+
+    @property
+    def row_ids(self) -> np.ndarray:
+        return np.arange(self.row_offset, self.row_offset + self.n_rows)
+
+
+@dataclasses.dataclass
+class EllpackMatrix:
+    """A quantized training matrix: one page in-core, many pages out-of-core."""
+
+    cuts: HistogramCuts
+    pages: list[EllpackPage]
+
+    @property
+    def n_rows(self) -> int:
+        return sum(p.n_rows for p in self.pages)
+
+    @property
+    def num_features(self) -> int:
+        return self.cuts.num_features
+
+    def single_page(self) -> EllpackPage:
+        if len(self.pages) == 1:
+            return self.pages[0]
+        return EllpackPage(
+            bins=np.concatenate([p.bins for p in self.pages], axis=0), row_offset=0
+        )
+
+    def iter_pages(self) -> Iterator[EllpackPage]:
+        return iter(self.pages)
+
+
+def rows_per_page(num_features: int, page_bytes: int = DEFAULT_PAGE_BYTES) -> int:
+    return max(1, page_bytes // max(num_features, 1))
+
+
+def create_ellpack_inmemory(
+    X: np.ndarray, max_bin: int = 256, cuts: HistogramCuts | None = None
+) -> EllpackMatrix:
+    """In-core path: sketch + quantize the whole matrix as one page (Alg. 2+4)."""
+    X = np.asarray(X)
+    if cuts is None:
+        sketch = QuantileSketch(X.shape[1], max_bin=max_bin)
+        sketch.update(X)
+        cuts = sketch.finalize()
+    return EllpackMatrix(cuts=cuts, pages=[EllpackPage(bin_batch(X, cuts), 0)])
+
+
+def create_ellpack_pages(
+    batches: Iterable[np.ndarray],
+    cuts: HistogramCuts,
+    page_bytes: int = DEFAULT_PAGE_BYTES,
+) -> Iterator[EllpackPage]:
+    """Out-of-core path (Alg. 5): accumulate binned batches; emit ~page_bytes pages.
+
+    Input batches are the CSR pages of the paper (variable row count); output
+    pages have a fixed byte budget so device staging is bounded.
+    """
+    buf: list[np.ndarray] = []
+    buf_bytes = 0
+    row_offset = 0
+    emitted_rows = 0
+    for batch in batches:
+        binned = bin_batch(batch, cuts)
+        buf.append(binned)
+        buf_bytes += binned.nbytes
+        while buf_bytes >= page_bytes:
+            rows_needed = rows_per_page(binned.shape[1], page_bytes)
+            stacked = np.concatenate(buf, axis=0) if len(buf) > 1 else buf[0]
+            page_bins, rest = stacked[:rows_needed], stacked[rows_needed:]
+            yield EllpackPage(np.ascontiguousarray(page_bins), row_offset)
+            row_offset += page_bins.shape[0]
+            emitted_rows += page_bins.shape[0]
+            buf = [rest] if rest.shape[0] else []
+            buf_bytes = rest.nbytes if rest.shape[0] else 0
+    if buf_bytes or (emitted_rows == 0 and buf):
+        stacked = np.concatenate(buf, axis=0) if len(buf) > 1 else buf[0]
+        if stacked.shape[0]:
+            yield EllpackPage(np.ascontiguousarray(stacked), row_offset)
+
+
+def compact(
+    pages: Sequence[EllpackPage], selected_rows: np.ndarray
+) -> tuple[EllpackPage, np.ndarray]:
+    """Gather selected global rows from many pages into one page (Alg. 7 Compact).
+
+    Returns (compacted page, the global row ids in page order) so gradients can
+    be aligned with the compacted rows.
+    """
+    selected_rows = np.asarray(selected_rows)
+    sel_sorted = np.sort(selected_rows)
+    chunks: list[np.ndarray] = []
+    ids: list[np.ndarray] = []
+    for page in pages:
+        lo = np.searchsorted(sel_sorted, page.row_offset, side="left")
+        hi = np.searchsorted(sel_sorted, page.row_offset + page.n_rows, side="left")
+        if hi > lo:
+            local = sel_sorted[lo:hi] - page.row_offset
+            chunks.append(page.bins[local])
+            ids.append(sel_sorted[lo:hi])
+    if not chunks:
+        m = pages[0].num_features if pages else 0
+        return EllpackPage(np.zeros((0, m), dtype=np.uint8), 0), np.zeros(0, np.int64)
+    return (
+        EllpackPage(np.concatenate(chunks, axis=0), 0),
+        np.concatenate(ids).astype(np.int64),
+    )
+
+
+def estimate_ellpack_bytes(n_rows: int, num_features: int) -> int:
+    """CalculateEllpackPageSize of Alg. 5 for dense uint8 ELLPACK."""
+    return n_rows * num_features
+
+
+def num_pages(n_rows: int, num_features: int, page_bytes: int = DEFAULT_PAGE_BYTES) -> int:
+    return max(1, math.ceil(estimate_ellpack_bytes(n_rows, num_features) / page_bytes))

@@ -1,0 +1,77 @@
+"""Device-memory model for the three training modes (paper Table 1 analogue).
+
+The container is CPU-only, so Table 1 ("maximum rows before OOM on a 16 GiB
+device") is reproduced with an explicit byte model of each mode's device
+working set, validated against the byte counters of the implementation
+(TransferStats + actual array sizes). Mirrors the paper's accounting:
+
+  in-core       whole ELLPACK matrix + per-row training state + histograms
+  out-of-core   double-buffered page + per-row training state + histograms
+  ooc+sampling  double-buffered page + compacted (f·n)-row ELLPACK
+                + per-row state for sampled rows only + histograms
+"""
+from __future__ import annotations
+
+import dataclasses
+
+GiB = 1024**3
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceMemoryModel:
+    hbm_bytes: int = 16 * GiB  # paper: V100 16 GiB
+    num_features: int = 500  # paper §4.1 synthetic dataset
+    max_bin: int = 256
+    max_depth: int = 8
+    page_bytes: int = 32 * 1024 * 1024
+    # per-row device state: gradient pair (8) + position (4) + cached pred (4)
+    row_state_bytes: int = 16
+
+    @property
+    def hist_bytes(self) -> int:
+        # deepest level histogram: 2^(max_depth-1) nodes x m x bins x (g,h) f32
+        return (2 ** (self.max_depth - 1)) * self.num_features * self.max_bin * 2 * 4
+
+    @property
+    def fixed_bytes(self) -> int:
+        cuts = self.num_features * self.max_bin * 4
+        return self.hist_bytes + cuts
+
+    def ellpack_bytes(self, n_rows: int) -> int:
+        return n_rows * self.num_features  # uint8 bins
+
+    def in_core_bytes(self, n_rows: int) -> int:
+        return self.fixed_bytes + self.ellpack_bytes(n_rows) + n_rows * (
+            self.row_state_bytes + 8  # + margins & labels resident
+        )
+
+    def out_of_core_bytes(self, n_rows: int) -> int:
+        return (
+            self.fixed_bytes
+            + 2 * self.page_bytes  # double-buffered page streaming
+            + n_rows * self.row_state_bytes
+        )
+
+    def sampled_bytes(self, n_rows: int, f: float) -> int:
+        kept = int(n_rows * f)
+        return (
+            self.fixed_bytes
+            + 2 * self.page_bytes
+            + self.ellpack_bytes(kept)  # compacted page (Alg. 7)
+            + kept * self.row_state_bytes
+        )
+
+    # ----- closed-form max rows per mode (Table 1) -----
+    def max_rows_in_core(self) -> int:
+        per_row = self.num_features + self.row_state_bytes + 8
+        return max(0, (self.hbm_bytes - self.fixed_bytes) // per_row)
+
+    def max_rows_out_of_core(self) -> int:
+        per_row = self.row_state_bytes
+        budget = self.hbm_bytes - self.fixed_bytes - 2 * self.page_bytes
+        return max(0, budget // per_row)
+
+    def max_rows_sampled(self, f: float) -> int:
+        per_row = f * (self.num_features + self.row_state_bytes)
+        budget = self.hbm_bytes - self.fixed_bytes - 2 * self.page_bytes
+        return max(0, int(budget / per_row))

@@ -1,0 +1,348 @@
+"""Out-of-core training executors (paper §3, Alg. 3 / 5 / 6 / 7).
+
+`ExternalGradientBooster` trains on data that does not fit in device memory:
+
+  preprocessing   Alg. 3: incremental quantile sketch over streamed batches
+                  Alg. 5: quantize batches into ~32 MiB ELLPACK pages, persist
+                          to a PageStore (disk) or host RAM
+  per iteration   gradients are computed from a host-cached margin vector
+    f < 1         Alg. 7: gradient-based sampling -> Compact the sampled rows
+                  from all pages into ONE device-resident page -> in-core
+                  Alg. 1 tree build (fast path; the paper's contribution)
+    f = 1         Alg. 6: naive streaming build — every tree level re-streams
+                  every page through the device (interconnect-bound; kept as
+                  the paper's measured baseline)
+  margin update   stream pages once, gather leaf values per page
+
+Fault tolerance: pages load through a retrying prefetcher; `save`/`resume`
+checkpoints the forest + RNG and rebuilds the margin cache by streaming, so a
+killed run restarts mid-boosting with identical results.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.booster import BoosterParams, EvalRecord, GradientBooster, bin_valid_from_cuts
+from repro.core.ellpack import (
+    DEFAULT_PAGE_BYTES,
+    EllpackPage,
+    bin_batch,
+    create_ellpack_pages,
+    rows_per_page,
+)
+from repro.core.quantile import QuantileSketch
+from repro.core.sampling import sample
+from repro.core.tree import (
+    TreeBuildResult,
+    grow_tree,
+    grow_tree_generic,
+    predict_tree_bins,
+)
+from repro.data.pages import GLOBAL_STATS, PageStore, Prefetcher, TransferStats
+from repro.kernels import ops
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class PageSet:
+    """The external ELLPACK matrix: pages either on disk or in host RAM."""
+
+    store: PageStore | None
+    host_pages: list[EllpackPage] | None
+    row_offsets: list[int]
+    n_rows: int
+    num_features: int
+    stats: TransferStats
+
+    @property
+    def n_pages(self) -> int:
+        return len(self.row_offsets)
+
+    def iter_pages(self, prefetch_depth: int = 2) -> Iterator[tuple[int, EllpackPage]]:
+        """Stream pages in order; disk-backed pages go through the prefetcher."""
+        if self.host_pages is not None:
+            for i, p in enumerate(self.host_pages):
+                yield i, p
+            return
+
+        def load(idx: int) -> EllpackPage:
+            data = self.store.read_page(idx)
+            return EllpackPage(bins=data["bins"], row_offset=self.row_offsets[idx])
+
+        for idx, page in Prefetcher(load, range(self.n_pages), depth=prefetch_depth):
+            yield idx, page
+
+    def stage(self, page: EllpackPage) -> Array:
+        """Host -> device copy of one page ("CopyToGPU"); counted for the paging model."""
+        self.stats.host_to_device_bytes += page.nbytes
+        return jnp.asarray(page.bins.astype(np.int32))
+
+
+class ExternalGradientBooster(GradientBooster):
+    """External-memory trainer; inherits predict/save/load from GradientBooster."""
+
+    def __init__(
+        self,
+        params: BoosterParams | None = None,
+        cache_dir: str | None = None,
+        page_bytes: int = DEFAULT_PAGE_BYTES,
+        prefetch_depth: int = 2,
+        compress_pages: bool = False,
+        stats: TransferStats | None = None,
+        checkpoint_every: int | None = None,
+        checkpoint_dir: str | None = None,
+        **kwargs,
+    ):
+        super().__init__(params, **kwargs)
+        self.cache_dir = cache_dir
+        self.page_bytes = page_bytes
+        self.prefetch_depth = prefetch_depth
+        self.compress_pages = compress_pages
+        self.stats = stats or GLOBAL_STATS
+        self.checkpoint_every = checkpoint_every
+        self.checkpoint_dir = checkpoint_dir
+        self.pages: PageSet | None = None
+        self.labels_: np.ndarray | None = None
+        self.margins_: np.ndarray | None = None
+
+    # ------------------------------------------------------------ preprocess
+    def preprocess(self, source) -> PageSet:
+        """Alg. 3 (incremental sketch) + Alg. 5 (external ELLPACK pages)."""
+        p = self.params
+        sketch = QuantileSketch(source.num_features, max_bin=min(p.max_bin, 255))
+        labels: list[np.ndarray] = []
+        for X_batch, y_batch in source.iter_batches():
+            sketch.update(X_batch)
+            labels.append(np.asarray(y_batch, np.float32))
+        self.cuts = sketch.finalize()
+        self.labels_ = np.concatenate(labels)
+
+        store = host_pages = None
+        row_offsets: list[int] = []
+        if self.cache_dir is not None:
+            store = PageStore(self.cache_dir, compress=self.compress_pages, stats=self.stats)
+        else:
+            host_pages = []
+        for page in create_ellpack_pages(
+            (X for X, _ in source.iter_batches()), self.cuts, self.page_bytes
+        ):
+            row_offsets.append(page.row_offset)
+            if store is not None:
+                store.write_page({"bins": page.bins}, {"row_offset": page.row_offset})
+            else:
+                host_pages.append(page)
+        self.pages = PageSet(
+            store=store,
+            host_pages=host_pages,
+            row_offsets=row_offsets,
+            n_rows=source.n_rows,
+            num_features=source.num_features,
+            stats=self.stats,
+        )
+        return self.pages
+
+    # ------------------------------------------------------------------ fit
+    def fit(
+        self,
+        source,
+        eval_set: tuple[np.ndarray, np.ndarray] | None = None,
+        eval_metric: str = "auto",
+        verbose: bool = False,
+        start_iteration: int = 0,
+    ) -> "ExternalGradientBooster":
+        p = self.params
+        if self.pages is None:
+            self.preprocess(source)
+        pages, labels = self.pages, self.labels_
+        n_bins = min(p.max_bin, 255)
+        bin_valid = bin_valid_from_cuts(self.cuts, n_bins)
+        labels_j = jnp.asarray(labels)
+
+        if self.margins_ is None:
+            self.base_margin_ = (
+                p.base_score if p.base_score is not None else self.objective.base_margin(labels)
+            )
+            self.margins_ = np.full(pages.n_rows, self.base_margin_, np.float32)
+
+        eval_bins = eval_labels = eval_margin = None
+        if eval_set is not None:
+            eval_bins = jnp.asarray(bin_batch(eval_set[0], self.cuts).astype(np.int32))
+            eval_labels = np.asarray(eval_set[1], np.float32)
+            eval_margin = jnp.full(eval_labels.shape[0], self.base_margin_, jnp.float32)
+            md = p.max_depth
+            for t in self.trees:  # resumed run: rebuild eval margins
+                eval_margin = eval_margin + p.learning_rate * predict_tree_bins(t, eval_bins, md)
+        metric_name = self._metric_name(eval_metric)
+
+        tp = p.tree_params()
+        use_sampling = p.sampling.method != "none" and (
+            p.sampling.method == "goss" or p.sampling.f < 1.0
+        )
+        t0 = time.perf_counter()
+        for it in range(start_iteration, p.n_estimators):
+            g, h = self.objective.grad_hess(jnp.asarray(self.margins_), labels_j)
+            self._rng, k = jax.random.split(self._rng)
+            if use_sampling:
+                res = self._build_tree_sampled(k, g, h, n_bins, bin_valid, tp)
+            else:
+                res = self._build_tree_streaming(g, h, n_bins, bin_valid, tp)
+            self.trees.append(res.tree)
+            self._update_margins(res, tp)
+            if eval_bins is not None:
+                pred = predict_tree_bins(res.tree, eval_bins, tp.max_depth)
+                eval_margin = eval_margin + p.learning_rate * pred
+                val = self._eval(metric_name, eval_labels, eval_margin)
+                self.eval_history.append(
+                    EvalRecord(it, metric_name, val, time.perf_counter() - t0)
+                )
+                if verbose:
+                    print(f"[{it}] {metric_name}={val:.6f}")
+            if (
+                self.checkpoint_every
+                and self.checkpoint_dir
+                and (it + 1) % self.checkpoint_every == 0
+            ):
+                self.save(self.checkpoint_dir)
+        return self
+
+    # -------------------------------------------------- Alg. 7 (sampled path)
+    def _sampled_capacity(self, n_rows: int) -> int:
+        """Static compacted-page capacity: keeps jit shapes stable across
+        iterations (Bernoulli sampling varies the kept count slightly)."""
+        f = self.params.sampling.f if self.params.sampling.method != "goss" else (
+            self.params.sampling.goss_a + self.params.sampling.goss_b
+        )
+        cap = int(n_rows * min(1.0, f * 1.25)) + 256
+        return min(n_rows, -(-cap // 1024) * 1024)
+
+    def _build_tree_sampled(self, key, g, h, n_bins, bin_valid, tp) -> TreeBuildResult:
+        p = self.params
+        mask, w = sample(key, g, h, p.sampling)
+        mask_np = np.asarray(mask)
+        sel = np.nonzero(mask_np)[0]
+        capacity = self._sampled_capacity(self.pages.n_rows)
+        if len(sel) > capacity:  # extreme tail: drop lowest-weight extras
+            sel = sel[:capacity]
+        gw = np.asarray(g * w)
+        hw = np.asarray(h * w)
+
+        # Compact: gather sampled rows from every page into one device page
+        chunks: list[np.ndarray] = []
+        for _, page in self.pages.iter_pages(self.prefetch_depth):
+            lo = np.searchsorted(sel, page.row_offset, side="left")
+            hi = np.searchsorted(sel, page.row_offset + page.n_rows, side="left")
+            if hi > lo:
+                local = sel[lo:hi] - page.row_offset
+                chunks.append(page.bins[local])
+        bins_np = np.concatenate(chunks, axis=0) if chunks else np.zeros(
+            (0, self.pages.num_features), np.uint8
+        )
+        pad = capacity - bins_np.shape[0]
+        g_np = np.zeros(capacity, np.float32)
+        h_np = np.zeros(capacity, np.float32)
+        g_np[: len(sel)] = gw[sel]
+        h_np[: len(sel)] = hw[sel]
+        if pad:  # zero-gradient padding rows: no histogram contribution
+            bins_np = np.concatenate(
+                [bins_np, np.zeros((pad, bins_np.shape[1]), np.uint8)], axis=0
+            )
+        staged = EllpackPage(bins_np, 0)
+        bins_c = self.pages.stage(staged)
+        res = grow_tree(
+            bins_c, jnp.asarray(g_np), jnp.asarray(h_np), n_bins, bin_valid, tp,
+            cut_values=self.cuts.values, cut_ptrs=self.cuts.ptrs,
+            impl=p.kernel_impl,
+        )
+        # positions only cover sampled rows -> margin update must stream pages
+        return TreeBuildResult(tree=res.tree, positions=None)
+
+    # ----------------------------------------------- Alg. 6 (streaming path)
+    def _build_tree_streaming(self, g, h, n_bins, bin_valid, tp) -> TreeBuildResult:
+        p = self.params
+        pages = self.pages
+        g_j, h_j = jnp.asarray(g), jnp.asarray(h)
+        positions: dict[int, Array] = {}
+        offsets = {}
+        for idx, page in pages.iter_pages(self.prefetch_depth):
+            positions[idx] = jnp.zeros(page.n_rows, jnp.int32)
+            offsets[idx] = (page.row_offset, page.n_rows)
+
+        def hist_fn(offset: int, count: int) -> Array:
+            hist = None
+            for idx, page in pages.iter_pages(self.prefetch_depth):
+                bins_dev = pages.stage(page)
+                ro, nr = offsets[idx]
+                pos = positions[idx]
+                level_pos = jnp.where(pos >= offset, pos - offset, -1)
+                hp = ops.build_histogram(
+                    bins_dev,
+                    jax.lax.dynamic_slice(g_j, (ro,), (nr,)),
+                    jax.lax.dynamic_slice(h_j, (ro,), (nr,)),
+                    level_pos, count, n_bins, impl=p.kernel_impl,
+                )
+                hist = hp if hist is None else hist + hp
+            return hist
+
+        def partition_fn(feature, split_bin, default_left, is_leaf) -> None:
+            for idx, page in pages.iter_pages(self.prefetch_depth):
+                bins_dev = pages.stage(page)
+                positions[idx] = ops.partition_rows(
+                    bins_dev, positions[idx], feature, split_bin, default_left,
+                    is_leaf, impl=p.kernel_impl,
+                )
+
+        tree = grow_tree_generic(
+            hist_fn, partition_fn, jnp.sum(g_j), jnp.sum(h_j), n_bins, bin_valid,
+            tp, self.cuts.values, self.cuts.ptrs,
+        )
+        # final positions point at leaves: margin update without re-streaming
+        pos_full = np.empty(pages.n_rows, np.int32)
+        for idx, (ro, nr) in offsets.items():
+            pos_full[ro : ro + nr] = np.asarray(positions[idx])
+        return TreeBuildResult(tree=tree, positions=jnp.asarray(pos_full))
+
+    # -------------------------------------------------------- margin update
+    def _update_margins(self, res: TreeBuildResult, tp) -> None:
+        lr = self.params.learning_rate
+        if res.positions is not None:  # streaming path: positions are leaves
+            leaf = np.asarray(res.tree.leaf_value)
+            self.margins_ += lr * leaf[np.asarray(res.positions)]
+            return
+        for _, page in self.pages.iter_pages(self.prefetch_depth):
+            bins_dev = self.pages.stage(page)
+            pred = predict_tree_bins(res.tree, bins_dev, tp.max_depth)
+            sl = slice(page.row_offset, page.row_offset + page.n_rows)
+            self.margins_[sl] += lr * np.asarray(pred)
+
+    # -------------------------------------------------------------- restart
+    @classmethod
+    def resume(
+        cls, checkpoint_path: str, source, cache_dir: str | None = None, **kw
+    ) -> "ExternalGradientBooster":
+        """Restart from a checkpoint: reload forest, rebuild margins by streaming."""
+        base = GradientBooster.load(checkpoint_path)
+        self = cls(base.params, cache_dir=cache_dir, **kw)
+        self.trees = base.trees
+        self.cuts = base.cuts
+        self.base_margin_ = base.base_margin_
+        self._rng = base._rng
+        # rebuild pages + margin cache deterministically from the source
+        self.preprocess(source)
+        # preprocess() re-derives cuts; restore the checkpointed ones (bit-exact)
+        self.cuts = base.cuts
+        self.margins_ = np.full(self.pages.n_rows, self.base_margin_, np.float32)
+        md = self.params.max_depth
+        for tree in self.trees:
+            for _, page in self.pages.iter_pages(self.prefetch_depth):
+                bins_dev = self.pages.stage(page)
+                pred = predict_tree_bins(tree, bins_dev, md)
+                sl = slice(page.row_offset, page.row_offset + page.n_rows)
+                self.margins_[sl] += self.params.learning_rate * np.asarray(pred)
+        return self

@@ -1,0 +1,113 @@
+"""Gradient-based sampling (paper §2.4): SGB, GOSS, and MVS.
+
+All methods return a (keep_mask, weight) pair over the full row set — mask
+semantics keep every shape static for jit / shard_map. The out-of-core
+executor compacts masked rows host-side (paper Alg. 7); the in-core and
+distributed paths simply multiply gradients by mask*weight.
+
+MVS (eq. 9): p_i = min(ĝ_i / μ, 1) with ĝ_i = sqrt(g_i² + λ h_i²) and μ the
+exact threshold solving Σ p_i = f·n (Ibragimov & Gusev 2019). Kept rows are
+reweighted 1/p_i so gradient statistics stay unbiased.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingConfig:
+    method: str = "none"  # none | uniform (SGB) | goss | mvs
+    f: float = 1.0  # overall sampling ratio (uniform & mvs)
+    goss_a: float = 0.2  # GOSS top-gradient fraction
+    goss_b: float = 0.1  # GOSS random fraction of the remainder
+    mvs_lambda: float | None = None  # None -> estimate from (Σg/Σh)²
+
+    def __post_init__(self):
+        if self.method not in ("none", "uniform", "goss", "mvs"):
+            raise ValueError(f"unknown sampling method {self.method!r}")
+        if not (0.0 < self.f <= 1.0):
+            raise ValueError("sampling ratio f must be in (0, 1]")
+
+
+def estimate_mvs_lambda(g: Array, h: Array) -> Array:
+    """Paper §2.4.3: λ estimated from the squared mean of the initial leaf value."""
+    return (jnp.sum(g) / jnp.maximum(jnp.sum(h), 1e-12)) ** 2
+
+
+@functools.partial(jax.jit, static_argnames=("f",))
+def _uniform_sample(key: Array, n: int | None, g: Array, f: float):
+    keep = jax.random.uniform(key, g.shape) < f
+    return keep, jnp.ones_like(g)
+
+
+@functools.partial(jax.jit, static_argnames=("a", "b"))
+def _goss_sample(key: Array, g: Array, h: Array, a: float, b: float):
+    """GOSS (§2.4.2): keep top-a·n by |ĝ|, sample b·n of the rest, scale by (1-a)/b."""
+    n = g.shape[0]
+    mag = jnp.abs(g)
+    k = max(int(a * n), 1)
+    threshold = jnp.sort(mag)[n - k]  # k-th largest
+    top = mag >= threshold
+    rest_prob = b / max(1.0 - a, 1e-12)
+    rand_keep = jax.random.uniform(key, (n,)) < rest_prob
+    keep = top | (~top & rand_keep)
+    weight = jnp.where(top, 1.0, (1.0 - a) / b)
+    return keep, weight
+
+
+def mvs_threshold(g_hat: Array, sample_size: Array | float) -> Array:
+    """Exact MVS threshold μ s.t. Σ min(ĝ_i/μ, 1) = sample_size.
+
+    Sort descending; with k rows "protected" (p=1), μ_k = (Σ_{i>k} ĝ_i)/(s-k).
+    The valid k is the one with ĝ_(k) ≥ μ_k (protected rows really have p≥1)
+    and ĝ_(k+1) ≤ μ_k. Vectorized search over all k.
+    """
+    n = g_hat.shape[0]
+    s = jnp.asarray(sample_size, jnp.float32)
+    sorted_desc = jnp.sort(g_hat)[::-1].astype(jnp.float32)
+    suffix = jnp.cumsum(sorted_desc[::-1])[::-1]  # suffix[k] = Σ_{i>=k} sorted[i]
+    ks = jnp.arange(n, dtype=jnp.float32)
+    denom = jnp.maximum(s - ks, 1e-12)
+    mu_k = suffix / denom  # μ when the top-k rows are protected
+    prev = jnp.concatenate([jnp.array([jnp.inf], jnp.float32), sorted_desc[:-1]])
+    valid = (prev >= mu_k) & (sorted_desc <= mu_k) & (ks < s)
+    # first valid k (there is always one when 0 < s <= n)
+    k_idx = jnp.argmax(valid)
+    return jnp.where(jnp.any(valid), mu_k[k_idx], jnp.max(g_hat))
+
+
+@functools.partial(jax.jit, static_argnames=("f",))
+def _mvs_sample(key: Array, g: Array, h: Array, f: float, lam: Array):
+    n = g.shape[0]
+    g_hat = jnp.sqrt(g * g + lam * (h * h))  # eq. (9)
+    mu = mvs_threshold(g_hat, f * n)
+    p = jnp.clip(g_hat / jnp.maximum(mu, 1e-30), 0.0, 1.0)
+    keep = jax.random.uniform(key, (n,)) < p
+    weight = 1.0 / jnp.maximum(p, 1e-12)
+    return keep, weight
+
+
+def sample(
+    key: Array, g: Array, h: Array, cfg: SamplingConfig
+) -> tuple[Array, Array]:
+    """Dispatch to the configured sampler; returns (keep_mask, weight)."""
+    if cfg.method == "none" or cfg.f >= 1.0 and cfg.method == "uniform":
+        return jnp.ones(g.shape, bool), jnp.ones_like(g)
+    if cfg.method == "uniform":
+        return _uniform_sample(key, None, g, cfg.f)
+    if cfg.method == "goss":
+        return _goss_sample(key, g, h, cfg.goss_a, cfg.goss_b)
+    if cfg.method == "mvs":
+        lam = (
+            estimate_mvs_lambda(g, h)
+            if cfg.mvs_lambda is None
+            else jnp.asarray(cfg.mvs_lambda, jnp.float32)
+        )
+        return _mvs_sample(key, g, h, cfg.f, lam)
+    raise ValueError(cfg.method)

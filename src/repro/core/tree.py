@@ -1,0 +1,243 @@
+"""Level-wise (depth-wise) GPU-style tree construction (paper Alg. 1).
+
+Trees use a complete-binary-tree array layout (node i -> children 2i+1, 2i+2,
+n_total = 2^(max_depth+1) - 1) so every step is static-shaped and jit-able:
+
+  level d:  histogram over active nodes  (kernels.ops.build_histogram)
+            -> EvaluateSplit             (core.split.evaluate_splits)
+            -> RepartitionInstances      (kernels.ops.partition_rows)
+
+`grow_tree_generic` drives the levels through two callbacks — histogram
+accumulation and row repartition — so the same driver serves:
+  * the in-core builder (`grow_tree`, one device-resident page, Alg. 1),
+  * the out-of-core streaming builder (page loop per level, Alg. 6),
+  * the distributed builder (per-shard histograms + psum, §2.2 AllReduce).
+
+Rows carry a global node-id position; once their node becomes a leaf the
+position freezes, so after the last level `leaf_value[pos]` is the tree's
+prediction for every training row (a single gather for the margin update).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.split import LevelSplits, SplitParams, evaluate_splits, leaf_weight
+from repro.kernels import ops
+
+Array = jax.Array
+
+
+class TreeArrays(NamedTuple):
+    """One regression tree, complete-tree layout. All arrays length n_total."""
+
+    feature: Array  # int32 split feature (0 for leaves)
+    split_bin: Array  # int32 split bin (go left iff bin <= split_bin)
+    split_value: Array  # f32 raw threshold (go left iff x <= split_value)
+    default_left: Array  # bool missing-value direction
+    is_leaf: Array  # bool
+    leaf_value: Array  # f32 (0 for internal nodes)
+
+    @property
+    def n_total(self) -> int:
+        return self.feature.shape[0]
+
+    @property
+    def max_depth(self) -> int:
+        return int(np.log2(self.n_total + 1)) - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class TreeParams:
+    max_depth: int = 6
+    split: SplitParams = SplitParams()
+
+    @property
+    def n_total_nodes(self) -> int:
+        return 2 ** (self.max_depth + 1) - 1
+
+
+class TreeBuildResult(NamedTuple):
+    tree: TreeArrays
+    positions: Array  # (n_rows,) final leaf node per training row
+
+
+HistFn = Callable[[int, int], Array]  # (offset, count) -> (count, m, n_bins, 2)
+PartitionFn = Callable[[Array, Array, Array, Array], None]
+
+
+def grow_tree_generic(
+    hist_fn: HistFn,
+    partition_fn: PartitionFn,
+    total_g: Array,
+    total_h: Array,
+    n_bins: int,
+    bin_valid: Array,  # (m, n_bins) bool
+    params: TreeParams,
+    cut_values: np.ndarray | None = None,
+    cut_ptrs: np.ndarray | None = None,
+) -> TreeArrays:
+    n_total = params.n_total_nodes
+    max_depth = params.max_depth
+
+    feature = jnp.zeros(n_total, jnp.int32)
+    split_bin = jnp.zeros(n_total, jnp.int32)
+    default_left = jnp.zeros(n_total, bool)
+    is_leaf = jnp.ones(n_total, bool)
+    leaf_value = jnp.zeros(n_total, jnp.float32)
+    node_g = jnp.zeros(n_total, jnp.float32).at[0].set(total_g)
+    node_h = jnp.zeros(n_total, jnp.float32).at[0].set(total_h)
+
+    for depth in range(max_depth):
+        offset = 2**depth - 1
+        count = 2**depth
+        hist = hist_fn(offset, count)
+        lvl_g = jax.lax.dynamic_slice(node_g, (offset,), (count,))
+        lvl_h = jax.lax.dynamic_slice(node_h, (offset,), (count,))
+        splits: LevelSplits = evaluate_splits(hist, lvl_g, lvl_h, bin_valid, params.split)
+
+        # only nodes that are still growable (parent split) may split
+        growable = (
+            ~jax.lax.dynamic_slice(is_leaf, (offset,), (count,))
+            if depth
+            else jnp.ones(count, bool)
+        )
+        do_split = splits.should_split & growable
+
+        idx = offset + jnp.arange(count)
+        feature = feature.at[idx].set(jnp.where(do_split, splits.feature, 0))
+        split_bin = split_bin.at[idx].set(jnp.where(do_split, splits.split_bin, 0))
+        default_left = default_left.at[idx].set(splits.default_left & do_split)
+        is_leaf = is_leaf.at[idx].set(~do_split)
+        # nodes finalized as leaves at this level get their weight (eq. 6)
+        w = leaf_weight(lvl_g, lvl_h, params.split.reg_lambda)
+        leaf_value = leaf_value.at[idx].set(jnp.where(do_split | ~growable, 0.0, w))
+
+        left_idx, right_idx = 2 * idx + 1, 2 * idx + 2
+        node_g = node_g.at[left_idx].set(jnp.where(do_split, splits.left_g, 0.0))
+        node_h = node_h.at[left_idx].set(jnp.where(do_split, splits.left_h, 0.0))
+        node_g = node_g.at[right_idx].set(jnp.where(do_split, splits.right_g, 0.0))
+        node_h = node_h.at[right_idx].set(jnp.where(do_split, splits.right_h, 0.0))
+        # children start growable iff parent split
+        is_leaf = is_leaf.at[left_idx].set(~do_split)
+        is_leaf = is_leaf.at[right_idx].set(~do_split)
+
+        partition_fn(feature, split_bin, default_left, is_leaf)
+
+    # final level: every still-growable node is a leaf with eq.-(6) weight
+    offset = 2**max_depth - 1
+    count = 2**max_depth
+    idx = offset + jnp.arange(count)
+    lvl_g = jax.lax.dynamic_slice(node_g, (offset,), (count,))
+    lvl_h = jax.lax.dynamic_slice(node_h, (offset,), (count,))
+    growable = (
+        ~jax.lax.dynamic_slice(is_leaf, (offset,), (count,))
+        if max_depth
+        else jnp.ones(1, bool)
+    )
+    w = leaf_weight(lvl_g, lvl_h, params.split.reg_lambda)
+    leaf_value = leaf_value.at[idx].set(jnp.where(growable, w, leaf_value[idx]))
+    is_leaf = is_leaf.at[idx].set(True)
+
+    # raw split thresholds for prediction on unquantized features
+    if cut_values is not None and cut_ptrs is not None:
+        cut_values_j = jnp.asarray(cut_values)
+        cut_ptrs_j = jnp.asarray(cut_ptrs)
+        split_value = cut_values_j[cut_ptrs_j[feature] + split_bin]
+    else:
+        split_value = jnp.zeros(n_total, jnp.float32)
+    split_value = jnp.where(is_leaf, 0.0, split_value)
+
+    return TreeArrays(
+        feature=feature,
+        split_bin=split_bin,
+        split_value=split_value,
+        default_left=default_left,
+        is_leaf=is_leaf,
+        leaf_value=leaf_value,
+    )
+
+
+def grow_tree(
+    bins: Array,  # (n_rows, m) int32 quantized features
+    g: Array,  # (n_rows,) f32 (already sample-weighted)
+    h: Array,  # (n_rows,) f32
+    n_bins: int,
+    bin_valid: Array,
+    params: TreeParams,
+    cut_values: np.ndarray | None = None,
+    cut_ptrs: np.ndarray | None = None,
+    impl: str = "auto",
+) -> TreeBuildResult:
+    """In-core builder (paper Alg. 1): one device-resident ELLPACK page."""
+    n_rows = bins.shape[0]
+    pos_box = [jnp.zeros(n_rows, jnp.int32)]
+
+    def hist_fn(offset: int, count: int) -> Array:
+        level_pos = jnp.where(pos_box[0] >= offset, pos_box[0] - offset, -1)
+        return ops.build_histogram(bins, g, h, level_pos, count, n_bins, impl=impl)
+
+    def partition_fn(feature, split_bin, default_left, is_leaf) -> None:
+        pos_box[0] = ops.partition_rows(
+            bins, pos_box[0], feature, split_bin, default_left, is_leaf, impl=impl
+        )
+
+    tree = grow_tree_generic(
+        hist_fn,
+        partition_fn,
+        jnp.sum(g),
+        jnp.sum(h),
+        n_bins,
+        bin_valid,
+        params,
+        cut_values,
+        cut_ptrs,
+    )
+    return TreeBuildResult(tree=tree, positions=pos_box[0])
+
+
+def predict_tree_bins(tree: TreeArrays, bins: Array, max_depth: int) -> Array:
+    """Predict one tree over quantized rows."""
+    return ops.predict_bins(
+        bins,
+        tree.feature,
+        tree.split_bin,
+        tree.default_left,
+        tree.is_leaf,
+        tree.leaf_value,
+        max_depth,
+    )
+
+
+def predict_tree_raw(tree: TreeArrays, X: Array, max_depth: int) -> Array:
+    """Predict one tree over raw (unquantized) features using stored thresholds."""
+    n_rows = X.shape[0]
+    pos = jnp.zeros(n_rows, jnp.int32)
+
+    def step(pos, _):
+        f_idx = tree.feature[pos]
+        x = jnp.take_along_axis(X, f_idx[:, None], axis=1)[:, 0]
+        missing = jnp.isnan(x)
+        go_left = jnp.where(missing, tree.default_left[pos], x <= tree.split_value[pos])
+        child = 2 * pos + 1 + jnp.where(go_left, 0, 1)
+        return jnp.where(tree.is_leaf[pos], pos, child), None
+
+    pos, _ = jax.lax.scan(step, pos, None, length=max_depth)
+    return tree.leaf_value[pos]
+
+
+def stack_trees(trees: list[TreeArrays]) -> TreeArrays:
+    """Stack a forest into one TreeArrays with a leading tree axis."""
+    return TreeArrays(*[jnp.stack(x) for x in zip(*trees)])
+
+
+def predict_forest_raw(
+    forest: TreeArrays, X: Array, max_depth: int, learning_rate: float, base_margin: float
+) -> Array:
+    """Sum of per-tree predictions (eq. 1), vmapped over the forest axis."""
+    per_tree = jax.vmap(lambda t: predict_tree_raw(t, X, max_depth))(forest)
+    return base_margin + learning_rate * jnp.sum(per_tree, axis=0)

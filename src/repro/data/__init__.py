@@ -1,0 +1,19 @@
+from repro.data.synthetic import (
+    SyntheticSource,
+    ArraySource,
+    make_classification,
+    make_higgs_like,
+    make_regression,
+)
+from repro.data.pages import PageStore, Prefetcher, TransferStats
+
+__all__ = [
+    "SyntheticSource",
+    "ArraySource",
+    "make_classification",
+    "make_higgs_like",
+    "make_regression",
+    "PageStore",
+    "Prefetcher",
+    "TransferStats",
+]

@@ -1,0 +1,159 @@
+"""External page store + threaded prefetcher (paper §2.3 / §3.2 substrate).
+
+`PageStore` persists ELLPACK pages (and their labels/metadata) to disk with
+optional zstd compression; `Prefetcher` is the "multi-threaded pre-fetcher" of
+§2.3 — it loads page k+1..k+depth from disk while page k is being consumed, so
+host I/O overlaps device compute. `TransferStats` counts the bytes that cross
+each boundary (disk->host, host->device), which is the measured quantity behind
+the paper's PCIe-bottleneck argument and our roofline paging model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import json
+import os
+import queue
+import threading
+import time
+from typing import Callable, Iterable, Iterator
+
+import numpy as np
+
+try:
+    import zstandard as _zstd
+except Exception:  # pragma: no cover
+    _zstd = None
+
+
+@dataclasses.dataclass
+class TransferStats:
+    disk_read_bytes: int = 0
+    disk_write_bytes: int = 0
+    host_to_device_bytes: int = 0
+    device_to_host_bytes: int = 0
+    page_loads: int = 0
+    load_seconds: float = 0.0
+
+    def reset(self) -> None:
+        self.disk_read_bytes = 0
+        self.disk_write_bytes = 0
+        self.host_to_device_bytes = 0
+        self.device_to_host_bytes = 0
+        self.page_loads = 0
+        self.load_seconds = 0.0
+
+
+GLOBAL_STATS = TransferStats()
+
+
+def _encode(arrays: dict[str, np.ndarray], compress: bool) -> bytes:
+    buf = io.BytesIO()
+    np.savez(buf, **arrays)
+    raw = buf.getvalue()
+    if compress and _zstd is not None:
+        return b"ZST0" + _zstd.ZstdCompressor(level=1).compress(raw)
+    return b"RAW0" + raw
+
+
+def _decode(blob: bytes) -> dict[str, np.ndarray]:
+    tag, body = blob[:4], blob[4:]
+    if tag == b"ZST0":
+        if _zstd is None:
+            raise RuntimeError("zstd page but zstandard not installed")
+        body = _zstd.ZstdDecompressor().decompress(body)
+    data = np.load(io.BytesIO(body))
+    return {k: data[k] for k in data.files}
+
+
+class PageStore:
+    """Directory of numbered pages; thread-safe reads."""
+
+    def __init__(self, root: str, compress: bool = False, stats: TransferStats | None = None):
+        self.root = root
+        self.compress = compress
+        self.stats = stats or GLOBAL_STATS
+        os.makedirs(root, exist_ok=True)
+        self._meta: dict = {"pages": []}
+        self._meta_path = os.path.join(root, "manifest.json")
+        if os.path.exists(self._meta_path):
+            with open(self._meta_path) as fh:
+                self._meta = json.load(fh)
+
+    @property
+    def n_pages(self) -> int:
+        return len(self._meta["pages"])
+
+    def _path(self, idx: int) -> str:
+        return os.path.join(self.root, f"page_{idx:06d}.bin")
+
+    def write_page(self, arrays: dict[str, np.ndarray], meta: dict | None = None) -> int:
+        idx = self.n_pages
+        blob = _encode(arrays, self.compress)
+        with open(self._path(idx), "wb") as fh:
+            fh.write(blob)
+        self.stats.disk_write_bytes += len(blob)
+        entry = {"idx": idx, "bytes": len(blob)}
+        entry.update(meta or {})
+        self._meta["pages"].append(entry)
+        with open(self._meta_path, "w") as fh:
+            json.dump(self._meta, fh)
+        return idx
+
+    def read_page(self, idx: int) -> dict[str, np.ndarray]:
+        t0 = time.perf_counter()
+        with open(self._path(idx), "rb") as fh:
+            blob = fh.read()
+        out = _decode(blob)
+        self.stats.disk_read_bytes += len(blob)
+        self.stats.page_loads += 1
+        self.stats.load_seconds += time.perf_counter() - t0
+        return out
+
+    def page_meta(self, idx: int) -> dict:
+        return self._meta["pages"][idx]
+
+
+class Prefetcher:
+    """Background-thread page loader (the §2.3 multi-threaded pre-fetcher).
+
+    Wraps any `load(idx)` callable; yields pages in order while keeping up to
+    `depth` loads in flight ahead of the consumer. Failed loads are retried
+    (`retries`) before surfacing — transient-I/O fault tolerance for long runs.
+    """
+
+    def __init__(
+        self,
+        load: Callable[[int], dict],
+        indices: Iterable[int],
+        depth: int = 2,
+        retries: int = 2,
+    ):
+        self._load = load
+        self._indices = list(indices)
+        self._queue: "queue.Queue[tuple[int, object]]" = queue.Queue(maxsize=depth)
+        self._retries = retries
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self) -> None:
+        for idx in self._indices:
+            err: Exception | None = None
+            for _ in range(self._retries + 1):
+                try:
+                    page = self._load(idx)
+                    err = None
+                    break
+                except Exception as e:  # pragma: no cover - exercised via fault test
+                    err = e
+            self._queue.put((idx, err if err is not None else page))
+        self._queue.put((-1, None))
+
+    def __iter__(self) -> Iterator[tuple[int, dict]]:
+        while True:
+            idx, item = self._queue.get()
+            if idx == -1:
+                return
+            if isinstance(item, Exception):
+                raise RuntimeError(f"page {idx} failed to load after retries") from item
+            yield idx, item

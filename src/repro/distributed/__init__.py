@@ -1,0 +1,13 @@
+from repro.distributed.gbdt_shard import (
+    DistConfig,
+    distributed_train_step,
+    grow_tree_distributed,
+    make_gbdt_step_fn,
+)
+
+__all__ = [
+    "DistConfig",
+    "distributed_train_step",
+    "grow_tree_distributed",
+    "make_gbdt_step_fn",
+]

@@ -1,0 +1,114 @@
+r"""Pallas TPU kernel: node-aware gradient histogram via one-hot MXU contractions.
+
+TPU adaptation of the paper's BuildHistograms hot spot. CUDA builds gradient
+histograms with atomic scatter-adds into shared memory; TPUs have no atomics,
+so we reformulate the scatter as two dense one-hot contractions that lower to
+MXU matmuls:
+
+    hist[n, f*B + b] = sum_r (onehot(pos_r == n) * g_r)  @  onehot(bin_{r,f} == b)
+                        \____________(R, N)___________/     \______(R, F*B)______/
+
+The grid tiles (features, rows); rows are the innermost (sequential) grid dim
+so the output block is revisited and accumulated in VMEM across row tiles.
+
+VMEM working set per grid step (defaults R=256, Ft=8, B=256, N<=128):
+  bin one-hot (R, Ft*B) f32 = 2 MiB, node one-hot (R, N) f32 = 128 KiB,
+  out block (N, Ft, B, 2) f32 <= 2 MiB  -> comfortably under 16 MiB VMEM,
+MXU shapes (N x R) @ (R x Ft*B) with Ft*B a multiple of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MISSING_BIN = 255
+
+
+def _hist_kernel(bins_ref, g_ref, h_ref, pos_ref, out_ref, *, n_nodes: int, n_bins: int):
+    r_step = pl.program_id(1)
+    bins = bins_ref[...]  # (R, Ft) int32
+    g = g_ref[...]  # (R,) f32
+    h = h_ref[...]
+    pos = pos_ref[...]  # (R,) int32
+    R, Ft = bins.shape
+
+    node_iota = jax.lax.broadcasted_iota(jnp.int32, (R, n_nodes), 1)
+    node_oh = (pos[:, None] == node_iota).astype(jnp.float32)  # (R, N); pos<0 matches none
+    bin_iota = jax.lax.broadcasted_iota(jnp.int32, (R, Ft, n_bins), 2)
+    valid = (bins != MISSING_BIN)[..., None]
+    bin_oh = jnp.where((bins[..., None] == bin_iota) & valid, 1.0, 0.0)
+    bin_oh = bin_oh.reshape(R, Ft * n_bins)
+
+    contract = (((0,), (0,)), ((), ()))  # contract rows
+    hg = jax.lax.dot_general(
+        node_oh * g[:, None], bin_oh, contract, preferred_element_type=jnp.float32
+    )
+    hh = jax.lax.dot_general(
+        node_oh * h[:, None], bin_oh, contract, preferred_element_type=jnp.float32
+    )
+    update = jnp.stack(
+        [hg.reshape(n_nodes, Ft, n_bins), hh.reshape(n_nodes, Ft, n_bins)], axis=-1
+    )
+
+    @pl.when(r_step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += update
+
+
+def _pad_to(x: jax.Array, size: int, axis: int, fill) -> jax.Array:
+    pad = size - x.shape[axis]
+    if pad <= 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_nodes", "n_bins", "row_tile", "feat_tile", "interpret"),
+)
+def build_histogram(
+    bins: jax.Array,  # (n_rows, m) int32 (uint8 ok; cast below)
+    g: jax.Array,
+    h: jax.Array,
+    positions: jax.Array,
+    n_nodes: int,
+    n_bins: int,
+    *,
+    row_tile: int = 256,
+    feat_tile: int = 8,
+    interpret: bool = True,
+) -> jax.Array:
+    n_rows, m = bins.shape
+    r_pad = -n_rows % row_tile
+    f_pad = -m % feat_tile
+    n_rows_p, m_p = n_rows + r_pad, m + f_pad
+
+    bins_p = _pad_to(_pad_to(bins.astype(jnp.int32), n_rows_p, 0, MISSING_BIN), m_p, 1, MISSING_BIN)
+    g_p = _pad_to(g.astype(jnp.float32), n_rows_p, 0, 0.0)
+    h_p = _pad_to(h.astype(jnp.float32), n_rows_p, 0, 0.0)
+    pos_p = _pad_to(positions.astype(jnp.int32), n_rows_p, 0, -1)
+
+    grid = (m_p // feat_tile, n_rows_p // row_tile)
+    out = pl.pallas_call(
+        functools.partial(_hist_kernel, n_nodes=n_nodes, n_bins=n_bins),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_tile, feat_tile), lambda f, r: (r, f)),
+            pl.BlockSpec((row_tile,), lambda f, r: (r,)),
+            pl.BlockSpec((row_tile,), lambda f, r: (r,)),
+            pl.BlockSpec((row_tile,), lambda f, r: (r,)),
+        ],
+        out_specs=pl.BlockSpec(
+            (n_nodes, feat_tile, n_bins, 2), lambda f, r: (0, f, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_nodes, m_p, n_bins, 2), jnp.float32),
+        interpret=interpret,
+    )(bins_p, g_p, h_p, pos_p)
+    return out[:, :m]

@@ -1,0 +1,78 @@
+"""Dispatch layer: Pallas kernel on TPU, pure-jnp oracle elsewhere.
+
+Every op takes ``impl`` in {"auto", "pallas", "ref"}:
+  - "auto": compiled Pallas on TPU backends, oracle on CPU/GPU hosts (the
+    oracle is itself jit-compiled jnp and is the fast path off-TPU);
+  - "pallas": force the kernel (interpret=True off-TPU, used by kernel tests);
+  - "ref": force the oracle.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+from repro.kernels import ellpack_bin as _ellpack_bin
+from repro.kernels import histogram as _histogram
+from repro.kernels import partition as _partition
+from repro.kernels import ref as _ref
+
+MISSING_BIN = _ref.MISSING_BIN
+
+_FORCE = os.environ.get("REPRO_KERNEL_IMPL", "")  # optional global override
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover - device probing should not fail
+        return False
+
+
+def _resolve(impl: str) -> str:
+    impl = _FORCE or impl
+    if impl == "auto":
+        return "pallas" if _on_tpu() else "ref"
+    if impl not in ("pallas", "ref"):
+        raise ValueError(f"impl must be auto|pallas|ref, got {impl!r}")
+    return impl
+
+
+_ref_build_histogram = jax.jit(_ref.build_histogram, static_argnames=("n_nodes", "n_bins"))
+_ref_bin_values = jax.jit(_ref.bin_values)
+_ref_partition_rows = jax.jit(_ref.partition_rows)
+_ref_predict_bins = jax.jit(_ref.predict_bins, static_argnames=("max_depth",))
+
+
+def build_histogram(bins, g, h, positions, n_nodes: int, n_bins: int, impl: str = "auto"):
+    if _resolve(impl) == "pallas":
+        return _histogram.build_histogram(
+            bins, g, h, positions, n_nodes, n_bins, interpret=not _on_tpu()
+        )
+    return _ref_build_histogram(bins, g, h, positions, n_nodes=n_nodes, n_bins=n_bins)
+
+
+def bin_values(x, padded_edges, n_bins_per_feature, impl: str = "auto"):
+    if _resolve(impl) == "pallas":
+        return _ellpack_bin.bin_values(
+            x, padded_edges, n_bins_per_feature, interpret=not _on_tpu()
+        )
+    return _ref_bin_values(x, padded_edges, n_bins_per_feature)
+
+
+def partition_rows(
+    bins, positions, feature, split_bin, default_left, is_leaf, impl: str = "auto"
+):
+    if _resolve(impl) == "pallas":
+        return _partition.partition_rows(
+            bins, positions, feature, split_bin, default_left, is_leaf,
+            interpret=not _on_tpu(),
+        )
+    return _ref_partition_rows(bins, positions, feature, split_bin, default_left, is_leaf)
+
+
+def predict_bins(bins, feature, split_bin, default_left, is_leaf, leaf_value, max_depth: int):
+    return _ref_predict_bins(
+        bins, feature, split_bin, default_left, is_leaf, leaf_value, max_depth=max_depth
+    )

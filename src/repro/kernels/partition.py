@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: row repartition (paper's RepartitionInstances).
+
+CUDA implementations radix-partition row indices with warp ballots; on TPU we
+keep an explicit per-row position array (complete-tree node ids) and update it
+vectorially. Per-node attribute gathers (split feature/bin, default direction,
+leaf flag) and the per-row "value of my split feature" gather are both
+expressed as one-hot contractions, which lower to MXU/VPU ops instead of
+serialized dynamic gathers.
+
+new_pos = 2*pos + 1 + go_right;   retired rows (leaf or pos<0) -> -1.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+MISSING_BIN = 255
+
+
+def _partition_kernel(
+    bins_ref, pos_ref, feature_ref, sbin_ref, dleft_ref, leaf_ref, out_ref, *, n_nodes: int
+):
+    bins = bins_ref[...]  # (R, m) int32
+    pos = pos_ref[...]  # (R,) int32
+    feature = feature_ref[...]  # (N,) int32
+    sbin = sbin_ref[...]  # (N,) int32
+    dleft = dleft_ref[...]  # (N,) int32 (0/1)
+    leaf = leaf_ref[...]  # (N,) int32 (0/1)
+    R, m = bins.shape
+
+    node_iota = jax.lax.broadcasted_iota(jnp.int32, (R, n_nodes), 1)
+    node_oh = (pos[:, None] == node_iota).astype(jnp.float32)  # (R, N)
+
+    def gather_node(attr):
+        return jax.lax.dot_general(
+            node_oh, attr.astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    f_idx = gather_node(feature).astype(jnp.int32)  # (R,)
+    s_val = gather_node(sbin).astype(jnp.int32)
+    d_val = gather_node(dleft) > 0.5
+    l_val = gather_node(leaf) > 0.5
+
+    feat_iota = jax.lax.broadcasted_iota(jnp.int32, (R, m), 1)
+    f_oh = (f_idx[:, None] == feat_iota).astype(jnp.float32)  # (R, m)
+    bval = jnp.sum(f_oh * bins.astype(jnp.float32), axis=1).astype(jnp.int32)
+
+    active = pos >= 0
+    missing = bval == MISSING_BIN
+    go_left = jnp.where(missing, d_val, bval <= s_val)
+    child = 2 * pos + 1 + jnp.where(go_left, 0, 1)
+    # rows at a leaf keep their position; inactive (padded) rows stay -1
+    out_ref[...] = jnp.where(active, jnp.where(l_val, pos, child), -1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("row_tile", "interpret"))
+def partition_rows(
+    bins: jax.Array,  # (n_rows, m) int32
+    positions: jax.Array,  # (n_rows,) int32 global node ids
+    feature: jax.Array,  # (n_nodes,) int32
+    split_bin: jax.Array,  # (n_nodes,) int32
+    default_left: jax.Array,  # (n_nodes,) bool
+    is_leaf: jax.Array,  # (n_nodes,) bool
+    *,
+    row_tile: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    n_rows, m = bins.shape
+    n_nodes = feature.shape[0]
+    r_pad = -n_rows % row_tile
+    bins_p = jnp.pad(bins.astype(jnp.int32), ((0, r_pad), (0, 0)), constant_values=MISSING_BIN)
+    pos_p = jnp.pad(positions.astype(jnp.int32), (0, r_pad), constant_values=-1)
+
+    grid = ((n_rows + r_pad) // row_tile,)
+    out = pl.pallas_call(
+        functools.partial(_partition_kernel, n_nodes=n_nodes),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((row_tile, m), lambda r: (r, 0)),
+            pl.BlockSpec((row_tile,), lambda r: (r,)),
+            pl.BlockSpec((n_nodes,), lambda r: (0,)),
+            pl.BlockSpec((n_nodes,), lambda r: (0,)),
+            pl.BlockSpec((n_nodes,), lambda r: (0,)),
+            pl.BlockSpec((n_nodes,), lambda r: (0,)),
+        ],
+        out_specs=pl.BlockSpec((row_tile,), lambda r: (r,)),
+        out_shape=jax.ShapeDtypeStruct((n_rows + r_pad,), jnp.int32),
+        interpret=interpret,
+    )(
+        bins_p,
+        pos_p,
+        feature.astype(jnp.int32),
+        split_bin.astype(jnp.int32),
+        default_left.astype(jnp.int32),
+        is_leaf.astype(jnp.int32),
+    )
+    return out[:n_rows]

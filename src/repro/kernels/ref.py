@@ -1,0 +1,108 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the semantics ground truth: each Pallas kernel in this package must
+be allclose to the corresponding function here over shape/dtype sweeps (see
+tests/test_kernels.py). They are also the fast dispatch target on CPU hosts.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+MISSING_BIN = 255
+
+
+def build_histogram(
+    bins: jax.Array,  # (n_rows, m) int32 local bin indices (MISSING_BIN = missing)
+    g: jax.Array,  # (n_rows,) f32
+    h: jax.Array,  # (n_rows,) f32
+    positions: jax.Array,  # (n_rows,) int32 level-local node index; < 0 = inactive
+    n_nodes: int,
+    n_bins: int,
+) -> jax.Array:
+    """Gradient histogram: out[n, f, b] = (sum g, sum h) over rows in node n with bin b.
+
+    Missing values contribute to no bin (XGBoost semantics: the missing mass of
+    a node is node_total - feature_total and is routed by the learned default
+    direction at split evaluation time).
+    """
+    n_rows, m = bins.shape
+    pos = positions.astype(jnp.int32)
+    active = pos >= 0
+    valid = (bins != MISSING_BIN) & active[:, None]
+    # flat scatter index: node * m * n_bins + f * n_bins + bin
+    feat = jax.lax.broadcasted_iota(jnp.int32, (n_rows, m), 1)
+    flat = pos[:, None] * (m * n_bins) + feat * n_bins + bins.astype(jnp.int32)
+    flat = jnp.where(valid, flat, 0)
+    wg = jnp.where(valid, g[:, None], 0.0).reshape(-1)
+    wh = jnp.where(valid, h[:, None], 0.0).reshape(-1)
+    size = n_nodes * m * n_bins
+    hist_g = jnp.zeros(size, jnp.float32).at[flat.reshape(-1)].add(wg)
+    hist_h = jnp.zeros(size, jnp.float32).at[flat.reshape(-1)].add(wh)
+    return jnp.stack(
+        [hist_g.reshape(n_nodes, m, n_bins), hist_h.reshape(n_nodes, m, n_bins)],
+        axis=-1,
+    )
+
+
+def bin_values(
+    x: jax.Array,  # (n_rows, m) f32 raw features
+    padded_edges: jax.Array,  # (m, max_bin) f32, +inf padded right edges
+    n_bins_per_feature: jax.Array,  # (m,) int32
+) -> jax.Array:
+    """Quantize raw features to local bins; NaN -> MISSING_BIN. (Alg. 4 inner loop.)"""
+    cnt = jnp.sum(x[:, :, None] > padded_edges[None, :, :], axis=-1).astype(jnp.int32)
+    b = jnp.clip(cnt, 0, n_bins_per_feature[None, :] - 1)
+    return jnp.where(jnp.isnan(x), MISSING_BIN, b).astype(jnp.int32)
+
+
+def partition_rows(
+    bins: jax.Array,  # (n_rows, m) int32
+    positions: jax.Array,  # (n_rows,) int32 global node ids; < 0 = retired
+    feature: jax.Array,  # (n_total_nodes,) int32 split feature per node
+    split_bin: jax.Array,  # (n_total_nodes,) int32 split bin per node (go left if bin <= split_bin)
+    default_left: jax.Array,  # (n_total_nodes,) bool missing direction
+    is_leaf: jax.Array,  # (n_total_nodes,) bool
+) -> jax.Array:
+    """RepartitionInstances: rows move to child 2p+1 (left) or 2p+2 (right).
+
+    Rows sitting at a leaf keep their position (so after the last level every
+    row's position is its leaf node — the margin update is a single gather).
+    """
+    pos = positions.astype(jnp.int32)
+    active = pos >= 0
+    safe = jnp.where(active, pos, 0)
+    f_idx = feature[safe]
+    sbin = split_bin[safe]
+    dleft = default_left[safe]
+    leaf = is_leaf[safe]
+    bval = jnp.take_along_axis(bins, f_idx[:, None], axis=1)[:, 0]
+    missing = bval == MISSING_BIN
+    go_left = jnp.where(missing, dleft, bval <= sbin)
+    child = 2 * pos + 1 + jnp.where(go_left, 0, 1)
+    return jnp.where(active, jnp.where(leaf, pos, child), -1).astype(jnp.int32)
+
+
+def predict_bins(
+    bins: jax.Array,  # (n_rows, m) int32
+    feature: jax.Array,  # (n_nodes,) int32
+    split_bin: jax.Array,  # (n_nodes,) int32
+    default_left: jax.Array,  # (n_nodes,) bool
+    is_leaf: jax.Array,  # (n_nodes,) bool
+    leaf_value: jax.Array,  # (n_nodes,) f32
+    max_depth: int,
+) -> jax.Array:
+    """Traverse one complete-layout tree over quantized rows -> leaf values."""
+    n_rows = bins.shape[0]
+    pos = jnp.zeros(n_rows, jnp.int32)
+
+    def step(pos, _):
+        f_idx = feature[pos]
+        bval = jnp.take_along_axis(bins, f_idx[:, None], axis=1)[:, 0]
+        missing = bval == MISSING_BIN
+        go_left = jnp.where(missing, default_left[pos], bval <= split_bin[pos])
+        child = 2 * pos + 1 + jnp.where(go_left, 0, 1)
+        return jnp.where(is_leaf[pos], pos, child), None
+
+    pos, _ = jax.lax.scan(step, pos, None, length=max_depth)
+    return leaf_value[pos]

@@ -1,0 +1,339 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede any jax-importing import: jax locks the device count on init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves, without hardware:
+  * the sharding config is coherent (SPMD partitioner accepts it),
+  * the per-device memory fits (memory_analysis),
+  * and extracts FLOPs / bytes / collective bytes for §Roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --all
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k --multi-pod
+Results land in experiments/dryrun/<mesh>/<arch>__<shape>.json (resumable).
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ALL_ARCHS, LM_ARCHS, get_config
+from repro.configs.shapes import SHAPES, applicable, input_specs
+from repro.launch.mesh import make_production_mesh, mesh_axes
+from repro.models.serve import decode_step, prefill
+from repro.models.transformer import init_params
+from repro.roofline.analysis import analyze_compiled
+from repro.sharding.rules import (
+    activation_spec,
+    param_shardings,
+    serve_cache_specs,
+    set_mesh_context,
+)
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import TrainConfig, init_state, make_train_step
+
+OUT_ROOT = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+
+def _batch_shardings(batch_struct, mesh, axes):
+    dp = axes.data
+
+    def spec(leaf):
+        if leaf.ndim == 1:
+            s = P(dp) if leaf.shape[0] % _nd(mesh, dp) == 0 else P(None)
+        elif leaf.ndim == 2:
+            s = P(dp, None)
+        else:
+            s = P(dp, *([None] * (leaf.ndim - 1)))
+        if leaf.shape[0] % _nd(mesh, dp) != 0:
+            s = P(*([None] * leaf.ndim))
+        return NamedSharding(mesh, s)
+
+    return jax.tree_util.tree_map(spec, batch_struct)
+
+
+def _nd(mesh, names):
+    n = 1
+    for name in names if isinstance(names, tuple) else (names,):
+        n *= mesh.shape[name]
+    return n
+
+
+def _state_shardings(state_struct, mesh, axes):
+    from repro.train.train_step import TrainState
+    from repro.train.optimizer import AdamWState
+
+    p_sh = param_shardings(state_struct.params, mesh, axes)
+    rep = NamedSharding(mesh, P())
+    return TrainState(
+        params=p_sh,
+        opt=AdamWState(step=rep, m=p_sh, v=p_sh),
+    )
+
+
+def _lower_for(cfg, shape, mesh, axes, unroll: bool = False):
+    """Lower one cell's step function for a given config. Returns lowered."""
+    specs = input_specs(cfg, shape.name)
+
+    with set_mesh_context(mesh, axes):
+        if shape.kind == "train":
+            oc = OptConfig(schedule="wsd" if cfg.name == "minicpm-2b" else "cosine")
+            state_struct = jax.eval_shape(
+                lambda k: init_state(k, cfg, oc), jax.random.PRNGKey(0)
+            )
+            state_sh = _state_shardings(state_struct, mesh, axes)
+            batch_sh = _batch_shardings(specs, mesh, axes)
+            step = make_train_step(cfg, oc, TrainConfig(remat=True, unroll_layers=unroll))
+            jitted = jax.jit(
+                step, in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None), donate_argnums=0,
+            )
+            return jitted.lower(state_struct, specs)
+        if shape.kind == "prefill":
+            params_struct = jax.eval_shape(
+                lambda k: init_params(k, cfg), jax.random.PRNGKey(0)
+            )
+            p_sh = param_shardings(params_struct, mesh, axes)
+            tok_sh = _batch_shardings(specs, mesh, axes)["tokens"]
+
+            def fn(params, tokens):
+                return prefill(params, cfg, tokens, max_len=shape.seq_len)
+
+            return jax.jit(fn, in_shardings=(p_sh, tok_sh)).lower(
+                params_struct, specs["tokens"]
+            )
+        # decode
+        params_struct = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+        p_sh = param_shardings(params_struct, mesh, axes)
+        cache_struct = specs["cache"]
+        cache_specs = serve_cache_specs(cache_struct, mesh, axes, shape.global_batch)
+        cache_sh = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), cache_specs)
+        tok_struct = specs["tokens"]
+        B = shape.global_batch
+        tok_spec = P(axes.data) if B % _nd(mesh, axes.data) == 0 else P(None)
+        if tok_struct.ndim == 2:
+            tok_spec = P(axes.data, None) if B % _nd(mesh, axes.data) == 0 else P(None, None)
+        tok_sh = NamedSharding(mesh, tok_spec)
+
+        def fn(params, tokens, cache):
+            return decode_step(params, cfg, tokens, cache, unroll=unroll)
+
+        return jax.jit(
+            fn, in_shardings=(p_sh, tok_sh, cache_sh), donate_argnums=2
+        ).lower(params_struct, tok_struct, cache_struct)
+
+
+def _cost_triplet(compiled):
+    from repro.roofline.analysis import collective_bytes_from_hlo
+
+    cost = compiled.cost_analysis()
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    return (
+        float(cost.get("flops", 0.0)),
+        float(cost.get("bytes accessed", 0.0)),
+        coll,
+    )
+
+
+def lower_lm_cell(arch: str, shape_name: str, multi_pod: bool):
+    import dataclasses as _dc
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = mesh_axes(multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+
+    # full-depth compile: the lowering proof + memory analysis
+    compiled = _lower_for(cfg, shape, mesh, axes).compile()
+
+    # XLA cost analysis counts `while` (scan) bodies ONCE — scanned programs
+    # (train; ssm decode) are corrected by two-point depth extrapolation.
+    scanned = shape.kind == "train" or (shape.kind == "decode" and cfg.family == "ssm")
+    if scanned:
+        La = cfg.first_k_dense + 1
+        Lb = La + 1
+        fa = _cost_triplet(
+            _lower_for(_dc.replace(cfg, n_layers=La), shape, mesh, axes, unroll=True).compile()
+        )
+        fb = _cost_triplet(
+            _lower_for(_dc.replace(cfg, n_layers=Lb), shape, mesh, axes, unroll=True).compile()
+        )
+        n_extra = cfg.n_layers - La
+        flops = fa[0] + (fb[0] - fa[0]) * n_extra
+        bytes_ = fa[1] + (fb[1] - fa[1]) * n_extra
+        kinds = set(fa[2]) | set(fb[2])
+        coll = {
+            k: int(fa[2].get(k, 0) + (fb[2].get(k, 0) - fa[2].get(k, 0)) * n_extra)
+            for k in kinds
+        }
+    else:
+        flops, bytes_, coll = _cost_triplet(compiled)
+
+    tokens = (
+        shape.global_batch * shape.seq_len
+        if shape.kind in ("train", "prefill")
+        else shape.global_batch
+    )
+    report = analyze_compiled(
+        compiled,
+        arch=arch, shape=shape_name,
+        mesh_name="2x16x16" if multi_pod else "16x16",
+        chips=chips,
+        n_active_params=cfg.active_param_count(),
+        tokens=tokens,
+        kind="train" if shape.kind == "train" else "serve",
+    )
+    # overwrite the (undercounted) raw terms with the corrected ones
+    from repro.roofline.analysis import HW
+
+    report.flops_per_device = flops
+    report.bytes_per_device = bytes_
+    report.collective_breakdown = coll
+    report.collective_bytes_per_device = float(sum(coll.values()))
+    report.compute_s = flops / HW.peak_flops
+    report.memory_s = bytes_ / HW.hbm_bw
+    report.collective_s = report.collective_bytes_per_device / HW.ici_bw
+    terms = {
+        "compute": report.compute_s,
+        "memory": report.memory_s,
+        "collective": report.collective_s,
+    }
+    report.dominant = max(terms, key=terms.get)
+    total = flops * chips
+    report.useful_ratio = report.model_flops / total if total else 0.0
+    return report
+
+
+def lower_gbdt_cell(shape_name: str, multi_pod: bool):
+    """The paper's own workload: one boosting iteration on the production mesh."""
+    from repro.configs.xgb_paper import CONFIG as G
+    from repro.core.split import SplitParams
+    from repro.core.tree import TreeParams
+    from repro.distributed import DistConfig, make_gbdt_step_fn
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    axes = mesh_axes(multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    dsize = _nd(mesh, axes.data)
+
+    m = 512  # 500 features padded to the model-axis multiple (12 masked)
+    rows = G.rows_per_device * dsize
+    tp = TreeParams(max_depth=G.max_depth, split=SplitParams(reg_lambda=1.0))
+    dcfg = DistConfig(data_axes=axes.data, feature_axis=axes.model, kernel_impl="ref")
+    step = make_gbdt_step_fn(
+        mesh, tp, G.n_bins, dcfg, learning_rate=G.learning_rate,
+        objective=G.objective, sampling_f=G.sampling_f,
+    )
+    structs = (
+        jax.ShapeDtypeStruct((rows, m), jnp.uint8),  # compacted ELLPACK page
+        jax.ShapeDtypeStruct((rows,), jnp.float32),  # margin
+        jax.ShapeDtypeStruct((rows,), jnp.float32),  # labels
+        jax.ShapeDtypeStruct((m, G.n_bins), jnp.bool_),  # bin_valid
+        jax.ShapeDtypeStruct((m * G.n_bins,), jnp.float32),  # cut values (padded)
+        jax.ShapeDtypeStruct((m + 1,), jnp.int32),  # cut ptrs
+        jax.ShapeDtypeStruct((2,), jnp.uint32),  # rng key
+    )
+    with mesh:
+        lowered = step.lower(*structs)
+        compiled = lowered.compile()
+
+    # model flops for one boosting iteration ~ histogram builds: rows x depth x (g,h)
+    useful = rows * G.max_depth * 2 * 2  # one MAC per (row, level, grad pair)
+    report = analyze_compiled(
+        compiled, arch="xgb-paper", shape=shape_name,
+        mesh_name="2x16x16" if multi_pod else "16x16", chips=chips,
+        n_active_params=1, tokens=1, kind="train",
+    )
+    report.model_flops = float(useful)
+    total = report.flops_per_device * chips
+    report.useful_ratio = useful / total if total else 0.0
+    return report
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str) -> dict:
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    os.makedirs(os.path.join(out_dir, mesh_name), exist_ok=True)
+    path = os.path.join(out_dir, mesh_name, f"{arch}__{shape_name}.json")
+    if os.path.exists(path):
+        with open(path) as fh:
+            return json.load(fh)
+    t0 = time.perf_counter()
+    try:
+        if arch == "xgb-paper":
+            report = lower_gbdt_cell(shape_name, multi_pod)
+        else:
+            report = lower_lm_cell(arch, shape_name, multi_pod)
+        result = report.to_dict()
+        result["status"] = "ok"
+    except Exception as e:  # noqa: BLE001 — record failures, keep sweeping
+        result = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_name,
+            "status": "error", "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-2000:],
+        }
+    result["compile_seconds"] = round(time.perf_counter() - t0, 1)
+    with open(path, "w") as fh:
+        json.dump(result, fh, indent=1)
+    status = result["status"]
+    extra = (
+        f"dominant={result.get('dominant')} compile={result['compile_seconds']}s"
+        if status == "ok" else result.get("error", "")[:120]
+    )
+    print(f"[{mesh_name}] {arch} x {shape_name}: {status} {extra}", flush=True)
+    return result
+
+
+def iter_cells(include_gbdt: bool = True):
+    for arch in LM_ARCHS:
+        cfg = get_config(arch)
+        for shape_name, shape in SHAPES.items():
+            if applicable(cfg, shape):
+                yield arch, shape_name
+    if include_gbdt:
+        yield "xgb-paper", "boost_1m"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=os.path.abspath(OUT_ROOT))
+    args = ap.parse_args()
+
+    pods = []
+    if args.multi_pod or args.all or not args.single_pod:
+        pods.append(True)
+    if args.single_pod or args.all or not args.multi_pod:
+        pods.append(False)
+    pods = sorted(set(pods))  # False (single) first
+
+    cells = list(iter_cells())
+    if args.arch:
+        cells = [(a, s) for a, s in cells if a == args.arch]
+        if args.arch == "xgb-paper" and not cells:
+            cells = [("xgb-paper", "boost_1m")]
+    if args.shape:
+        cells = [(a, s) for a, s in cells if s == args.shape]
+
+    n_fail = 0
+    for multi_pod in pods:
+        for arch, shape in cells:
+            res = run_cell(arch, shape, multi_pod, args.out)
+            n_fail += res["status"] != "ok"
+    print(f"done; failures: {n_fail}")
+    return n_fail
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,42 @@
+"""Production meshes. FUNCTIONS only — importing this module never touches
+jax device state (assignment requirement)."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2x16x16 = 512 chips across two pods.
+
+    Falls back to a manual Mesh over a device prefix when the process holds
+    more devices than the mesh needs (the dry-run process holds 512)."""
+    import jax
+    from jax.sharding import Mesh
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 before importing jax"
+        )
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def mesh_axes(multi_pod: bool = False):
+    from repro.sharding.rules import MeshAxes
+
+    return MeshAxes(data=(("pod", "data") if multi_pod else ("data",)), model="model")
+
+
+def make_host_mesh(n_data: int | None = None, n_model: int = 1):
+    """Small mesh over whatever devices the host actually has (tests/examples)."""
+    import jax
+
+    n = len(jax.devices())
+    n_data = n_data or (n // n_model)
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

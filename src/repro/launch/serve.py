@@ -1,0 +1,64 @@
+"""Serving driver: batched prefill + decode for any assigned arch.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --tokens 16 --paged
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import LM_ARCHS, get_config
+from repro.models.serve import decode_step, prefill
+from repro.models.transformer import init_params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=LM_ARCHS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--paged", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=not args.full)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    if cfg.n_codebooks:
+        prompts = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len, cfg.n_codebooks)),
+            jnp.int32,
+        )
+    else:
+        prompts = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32
+        )
+
+    max_len = args.prompt_len + args.tokens
+    t0 = time.perf_counter()
+    logits, cache = prefill(params, cfg, prompts, max_len=max_len,
+                            paged=args.paged and cfg.family in ("dense", "moe"))
+    print(f"prefill: {args.batch}x{args.prompt_len} in {time.perf_counter()-t0:.2f}s")
+
+    dec = jax.jit(lambda t, c: decode_step(params, cfg, t, c))
+    tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    t0 = time.perf_counter()
+    out = [tok]
+    for _ in range(args.tokens):
+        lg, cache = dec(tok, cache)
+        tok = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        out.append(tok)
+    dt = time.perf_counter() - t0
+    print(f"decode: {args.tokens} steps x batch {args.batch} in {dt:.2f}s "
+          f"({args.tokens*args.batch/dt:.1f} tok/s)")
+    first = [int(np.asarray(t).reshape(args.batch, -1)[0, 0]) for t in out]
+    print("greedy continuation (seq 0):", first)
+
+
+if __name__ == "__main__":
+    main()

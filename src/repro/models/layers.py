@@ -1,0 +1,223 @@
+"""Core transformer layers: RMSNorm, RoPE, GQA attention (chunked/flash-style,
+optional sliding window), SwiGLU MLP. Pure-JAX, param pytrees, no framework.
+
+Attention is computed with a memory-efficient two-level chunking (lax.scan
+over query blocks; online-softmax scan over KV blocks) so 32k-token prefill
+never materializes an S x S score matrix. On real TPUs the same contraction
+pattern is what a Pallas flash kernel implements; the XLA version is the
+portable baseline and the oracle for tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def rms_norm(x: Array, weight: Array, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dtype)
+
+
+def rope_angles(positions: Array, head_dim: int, theta: float) -> tuple[Array, Array]:
+    """cos/sin tables for given integer positions; shape (..., head_dim/2)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x: (B, S, H, D); cos/sin: (B, S, D/2) or (S, D/2)."""
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    if cos.ndim == 2:  # (S, half) -> broadcast batch
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:  # (B, S, half)
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def _attn_chunk(q, k, v, q_pos, k_pos, window, scale: float):
+    """Attention of one query block against one KV block with online-softmax
+    statistics returned: (acc, m, l). Shapes:
+      q (B, Cq, KH, G, D), k/v (B, Ck, KH, D); positions (Cq,), (Ck,).
+    `window` may be a traced scalar (<= 0 means full causal attention).
+    """
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    causal = q_pos[:, None] >= k_pos[None, :]
+    in_window = (q_pos[:, None] - k_pos[None, :] < window) | (window <= 0)
+    causal &= in_window
+    s = jnp.where(causal[None, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)  # (B,H,G,Cq)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return acc, m, l
+
+
+def chunked_attention(
+    q: Array,  # (B, Sq, H, D)
+    k: Array,  # (B, Sk, KH, D)
+    v: Array,  # (B, Sk, KH, D)
+    q_positions: Array,  # (Sq,) global positions of queries
+    k_positions: Array,  # (Sk,)
+    window=0,  # 0 = full causal; may be a traced scalar (per-layer scan)
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> Array:
+    """Causal (optionally sliding-window) GQA attention, O(Cq*Ck) live memory."""
+    B, Sq, H, D = q.shape
+    _, Sk, KH, _ = k.shape
+    G = H // KH
+    scale = 1.0 / math.sqrt(D)
+    q = q.reshape(B, Sq, KH, G, D)
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    nq = -(-Sq // q_chunk)
+    nk = -(-Sk // kv_chunk)
+    # pad to multiples
+    pq = nq * q_chunk - Sq
+    pk = nk * kv_chunk - Sk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, (0, pq), constant_values=-1)
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        k_positions = jnp.pad(k_positions, (0, pk), constant_values=2**30)
+
+    kc = k.reshape(B, nk, kv_chunk, KH, D)
+    vc = v.reshape(B, nk, kv_chunk, KH, D)
+    kp = k_positions.reshape(nk, kv_chunk)
+
+    def q_block(carry, qi):
+        qb = jax.lax.dynamic_slice_in_dim(q, qi * q_chunk, q_chunk, axis=1)
+        qp = jax.lax.dynamic_slice_in_dim(q_positions, qi * q_chunk, q_chunk, axis=0)
+
+        def kv_block(state, j):
+            acc, m, l = state
+            a, mj, lj = _attn_chunk(qb, kc[:, j], vc[:, j], qp, kp[j], window, scale)
+            m_new = jnp.maximum(m, mj)
+            r_old = jnp.exp(m - m_new)
+            r_new = jnp.exp(mj - m_new)
+            acc = acc * r_old[..., None] + a * r_new[..., None]
+            l = l * r_old + lj * r_new
+            return (acc, m_new, l), None
+
+        init = (
+            jnp.zeros((B, KH, G, q_chunk, D), jnp.float32),
+            jnp.full((B, KH, G, q_chunk), -jnp.inf, jnp.float32),
+            jnp.zeros((B, KH, G, q_chunk), jnp.float32),
+        )
+        # checkpoint the KV body: flash-style backward — scores for one
+        # (q_chunk x kv_chunk) block at a time are rematerialized instead of
+        # saving every block's probabilities (O(S^2) memory otherwise).
+        (acc, m, l), _ = jax.lax.scan(
+            jax.checkpoint(kv_block, prevent_cse=False), init, jnp.arange(nk)
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return carry, out.astype(q.dtype)
+
+    _, blocks = jax.lax.scan(
+        jax.checkpoint(q_block, prevent_cse=False), None, jnp.arange(nq)
+    )
+    # blocks: (nq, B, KH, G, q_chunk, D) -> (B, Sq, H, D)
+    out = blocks.transpose(1, 2, 3, 0, 4, 5).reshape(B, KH, G, nq * q_chunk, D)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, nq * q_chunk, H, D)
+    return out[:, :Sq]
+
+
+def decode_attention(
+    q: Array,  # (B, 1, H, D) single new token
+    k_cache: Array,  # (B, L, KH, D)
+    v_cache: Array,  # (B, L, KH, D)
+    lengths: Array,  # (B,) valid cache lengths (the new token is at lengths-1)
+    window=0,
+) -> Array:
+    """Single-step decode attention over a (padded) KV cache."""
+    B, L, KH, D = k_cache.shape
+    H = q.shape[2]
+    G = H // KH
+    scale = 1.0 / math.sqrt(D)
+    qr = q.reshape(B, KH, G, D)
+    s = jnp.einsum("bhgd,blhd->bhgl", qr, k_cache, preferred_element_type=jnp.float32)
+    s = s * scale
+    pos = jnp.arange(L)[None, :]
+    valid = pos < lengths[:, None]
+    valid &= (pos >= (lengths[:, None] - window)) | (jnp.asarray(window) <= 0)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgl,blhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+def ring_decode_attention(
+    q: Array,  # (B, 1, H, D)
+    k_ring: Array,  # (B, W, KH, D) ring buffer (keys pre-roped at write time)
+    v_ring: Array,  # (B, W, KH, D)
+    valid_len,  # scalar: number of filled slots (== W once wrapped)
+) -> Array:
+    """Decode attention over a sliding-window ring buffer.
+
+    Slot order doesn't matter for softmax (RoPE was applied at write time);
+    only a validity mask over filled slots is needed.
+    """
+    B, W, KH, D = k_ring.shape
+    H = q.shape[2]
+    G = H // KH
+    scale = 1.0 / math.sqrt(D)
+    qr = q.reshape(B, KH, G, D)
+    s = jnp.einsum("bhgd,blhd->bhgl", qr, k_ring, preferred_element_type=jnp.float32)
+    s = s * scale
+    valid = jnp.arange(W)[None, :] < valid_len
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgl,blhd->bhgd", p.astype(v_ring.dtype), v_ring,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def swiglu(x: Array, w_gate: Array, w_up: Array, w_down: Array) -> Array:
+    g = jnp.einsum("bsd,df->bsf", x, w_gate.astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, w_up.astype(x.dtype))
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, w_down.astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Initialization helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key: Array, shape: tuple[int, ...], dtype, scale: float | None = None):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)

@@ -1,0 +1,401 @@
+"""Serving: prefill + single-token decode for every family.
+
+Cache layouts per family:
+  dense / moe      contiguous KVCache or PagedKVCache (layer-stacked, scanned)
+  ssm              SSMServeState: rolling conv cache + (H, P, N) SSD state per
+                   layer — O(1) in sequence length (why `long_500k` is cheap)
+  hybrid (hymba)   per-layer mix: ring caches (window) for SWA layers, full
+                   caches for global layers, plus SSM state; decode unrolled
+                   per layer so cache shapes may differ across layers.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.config import ModelConfig
+from repro.models.kvcache import KVCache, PagedKVCache, RingKVCache
+from repro.models.transformer import _mlp, _moe_ffn, project_logits
+from repro.sharding.rules import constrain_act
+
+Array = jax.Array
+
+
+class SSMServeState(NamedTuple):
+    conv: Array  # (L, B, conv_w-1, d_inner + 2*state)
+    ssm: Array  # (L, B, H, P, N) float32
+    length: Array  # () int32
+
+    @classmethod
+    def init(cls, cfg: ModelConfig, batch: int, n_layers: int | None = None, dtype=jnp.bfloat16):
+        Lc = n_layers if n_layers is not None else cfg.n_layers
+        di, N = cfg.d_inner, cfg.ssm_state
+        return cls(
+            jnp.zeros((Lc, batch, cfg.ssm_conv - 1, di + 2 * N), dtype),
+            jnp.zeros((Lc, batch, cfg.ssm_heads, cfg.ssm_head_dim, N), jnp.float32),
+            jnp.zeros((), jnp.int32),
+        )
+
+
+class HybridCaches(NamedTuple):
+    """Per-layer tuple caches for the unrolled hybrid serve path."""
+
+    attn: tuple  # per layer: KVCache-like (B,len,KH,hd) pairs + meta
+    ssm: SSMServeState
+
+
+# ---------------------------------------------------------------------------
+# attention-family helpers
+# ---------------------------------------------------------------------------
+
+
+def _qkv_token(bp_l, cfg: ModelConfig, xn: Array, position: Array):
+    q = jnp.einsum("bsd,dhk->bshk", xn, bp_l["wq"].astype(xn.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", xn, bp_l["wk"].astype(xn.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", xn, bp_l["wv"].astype(xn.dtype))
+    pos = jnp.atleast_1d(position)
+    cos, sin = L.rope_angles(pos, cfg.head_dim, cfg.rope_theta)
+    return L.apply_rope(q, cos, sin), L.apply_rope(k, cos, sin), v
+
+
+def _attn_decode_layer(bp_l, cfg, x, k_cache, v_cache, length, window):
+    """One layer's decode attention; returns (attn_out, new k/v cache slices)."""
+    xn = L.rms_norm(x, bp_l["attn_norm"], cfg.rms_eps)
+    q, k, v = _qkv_token(bp_l, cfg, xn, length)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype), (0, length, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype), (0, length, 0, 0))
+    lengths = jnp.full((x.shape[0],), length + 1, jnp.int32)
+    out = L.decode_attention(q, k_cache, v_cache, lengths, window=window)
+    return jnp.einsum("bshk,hkd->bsd", out, bp_l["wo"].astype(x.dtype)), k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# SSM helpers (token-level mirror of transformer._ssm_mix)
+# ---------------------------------------------------------------------------
+
+
+def _ssm_decode_layer(bp_l, cfg: ModelConfig, x, conv_cache, state):
+    di, N = cfg.d_inner, cfg.ssm_state
+    xn = L.rms_norm(x, bp_l["ssm_norm_in"], cfg.rms_eps)
+    proj = jnp.einsum("bsd,dp->bsp", xn, bp_l["in_proj"].astype(x.dtype))
+    z = proj[..., :di]
+    xbc = proj[..., di : 2 * di + 2 * N]
+    dt_raw = proj[..., 2 * di + 2 * N :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + bp_l["dt_bias"].astype(jnp.float32))
+    xbc_conv, conv_cache = ssm_lib.causal_conv(xbc, bp_l["conv_w"].astype(x.dtype), cache=conv_cache)
+    A = -jnp.exp(bp_l["A_log"].astype(jnp.float32))
+    y, state = ssm_lib.ssd_decode_step(
+        xbc_conv[:, 0], dt[:, 0], A, state, di, N, cfg.ssm_head_dim
+    )
+    xin = xbc_conv[:, 0, :di]
+    y = y + xin.astype(jnp.float32) * jnp.repeat(
+        bp_l["D"].astype(jnp.float32), cfg.ssm_head_dim, axis=-1
+    )
+    y = (y[:, None, :]).astype(x.dtype) * jax.nn.silu(z)
+    y = L.rms_norm(y, bp_l["gate_norm"], cfg.rms_eps)
+    return jnp.einsum("bsi,id->bsd", y, bp_l["out_proj"].astype(x.dtype)), conv_cache, state
+
+
+def _ssm_prefill_layer(bp_l, cfg: ModelConfig, x):
+    """Full-seq SSD returning (out, conv_cache, final_state)."""
+    from repro.models.transformer import _ssm_mix
+
+    di, N = cfg.d_inner, cfg.ssm_state
+    xn = L.rms_norm(x, bp_l["ssm_norm_in"], cfg.rms_eps)
+    proj = jnp.einsum("bsd,dp->bsp", xn, bp_l["in_proj"].astype(x.dtype))
+    xbc = proj[..., di : 2 * di + 2 * N]
+    W = cfg.ssm_conv
+    conv_cache = xbc[:, -(W - 1) :, :] if x.shape[1] >= W - 1 else jnp.pad(
+        xbc, ((0, 0), (W - 1 - x.shape[1], 0), (0, 0))
+    )
+    out, state = _ssm_mix(bp_l, cfg, x)
+    return out, conv_cache.astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Public serve API
+# ---------------------------------------------------------------------------
+
+
+def _embed_tokens(params, cfg: ModelConfig, tokens: Array) -> Array:
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.n_codebooks:
+        emb = params["codebook_embed"]
+        return sum(
+            jnp.take(emb[k], tokens[..., k], axis=0) for k in range(cfg.n_codebooks)
+        ).astype(dtype)
+    return jnp.take(params["embed"], tokens, axis=0).astype(dtype)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, paged: bool = False,
+               page_size: int = 256):
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.family == "ssm":
+        return SSMServeState.init(cfg, batch, dtype=dtype)
+    if cfg.family == "hybrid":
+        attn = []
+        for i in range(cfg.n_layers):
+            w = cfg.attn_window(i)
+            alloc = min(w, max_len) if w > 0 else max_len
+            attn.append(
+                (
+                    jnp.zeros((batch, alloc, cfg.n_kv_heads, cfg.head_dim), dtype),
+                    jnp.zeros((batch, alloc, cfg.n_kv_heads, cfg.head_dim), dtype),
+                )
+            )
+        return HybridCaches(attn=tuple(attn), ssm=SSMServeState.init(cfg, batch, dtype=dtype))
+    if paged:
+        return PagedKVCache.init(
+            cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim,
+            page_size=page_size, dtype=dtype,
+        )
+    return KVCache.init(cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.head_dim, dtype)
+
+
+def decode_step(params, cfg: ModelConfig, tokens: Array, cache, unroll: bool = False):
+    """One decode step. tokens: (B,) int32 — or (B, K) for codebook models.
+    Returns (logits (B, V) or (B, K, V), new cache)."""
+    toks = tokens[:, None] if tokens.ndim == 1 else tokens[:, None, :]
+    x = _embed_tokens(params, cfg, toks)  # (B,1,d)
+    blocks = params["blocks"]
+
+    if cfg.family in ("dense", "moe"):
+        x, cache = _decode_attn_families(params, cfg, x, cache)
+    elif cfg.family == "ssm":
+        x, cache = _decode_ssm(params, cfg, x, cache, unroll=unroll)
+    else:
+        x, cache = _decode_hybrid(params, cfg, x, cache)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = project_logits(params, cfg, x)
+    return logits[:, 0], cache
+
+
+def _layer_slice(tree, i):
+    return jax.tree_util.tree_map(lambda p: p[i], tree)
+
+
+def _decode_attn_families(params, cfg: ModelConfig, x, cache):
+    paged = isinstance(cache, PagedKVCache)
+    n_dense = cfg.first_k_dense if cfg.family == "moe" else 0
+
+    def run_layer(x, bp_l, layer_idx, global_layer_idx, moe: bool):
+        win = cfg.attn_window(global_layer_idx)
+        if paged:
+            xn = L.rms_norm(x, bp_l["attn_norm"], cfg.rms_eps)
+            q, k, v = _qkv_token(bp_l, cfg, xn, cache.lengths[0])
+            new_cache = cache.write_token(k, v, global_layer_idx)
+            kf, vf = new_cache.gather_layer(global_layer_idx)
+            out = L.decode_attention(q, kf, vf, cache.lengths + 1, window=win)
+            a = jnp.einsum("bshk,hkd->bsd", out, bp_l["wo"].astype(x.dtype))
+            x = x + a
+        else:
+            a, kc, vc = _attn_decode_layer(
+                bp_l, cfg, x,
+                cache.k[global_layer_idx], cache.v[global_layer_idx],
+                cache.length, win,
+            )
+            new_cache = KVCache(
+                cache.k.at[global_layer_idx].set(kc),
+                cache.v.at[global_layer_idx].set(vc),
+                cache.length,
+            )
+            x = x + a
+        if moe:
+            f, _ = _moe_ffn(bp_l, cfg, x)
+            x = x + f
+        else:
+            x = x + _mlp(bp_l, cfg, x)
+        return x, new_cache
+
+    gl = 0
+    if n_dense:
+        for i in range(n_dense):
+            bp_l = _layer_slice(params["dense_blocks"], i)
+            x, cache = run_layer(x, bp_l, i, gl, moe=False)
+            gl += 1
+    n_rest = cfg.n_layers - n_dense
+    for i in range(n_rest):
+        bp_l = _layer_slice(params["blocks"], i)
+        x, cache = run_layer(x, bp_l, i, gl, moe=(cfg.family == "moe"))
+        gl += 1
+    if paged:
+        cache = cache.advanced(1)
+    else:
+        cache = cache.advanced(1)
+    return x, cache
+
+
+def _decode_ssm(params, cfg: ModelConfig, x, cache: SSMServeState, unroll: bool = False):
+    def scan_body(h, inp):
+        bp_l, conv_l, state_l = inp
+        y, conv_l, state_l = _ssm_decode_layer(bp_l, cfg, h, conv_l, state_l)
+        return h + y, (conv_l, state_l)
+
+    if unroll:  # dry-run cost probe: XLA counts while bodies once
+        convs, states = [], []
+        for i in range(cfg.n_layers):
+            inp = (_layer_slice(params["blocks"], i), cache.conv[i], cache.ssm[i])
+            x, (c_l, s_l) = scan_body(x, inp)
+            convs.append(c_l)
+            states.append(s_l)
+        return x, SSMServeState(jnp.stack(convs), jnp.stack(states), cache.length + 1)
+
+    x, (conv, state) = jax.lax.scan(scan_body, x, (params["blocks"], cache.conv, cache.ssm))
+    return x, SSMServeState(conv, state, cache.length + 1)
+
+
+def _decode_hybrid(params, cfg: ModelConfig, x, cache: HybridCaches):
+    new_attn = []
+    conv, state = cache.ssm.conv, cache.ssm.ssm
+    new_conv, new_state = [], []
+    length = cache.ssm.length
+    for i in range(cfg.n_layers):
+        bp_l = _layer_slice(params["blocks"], i)
+        win = cfg.attn_window(i)
+        kc, vc = cache.attn[i]
+        alloc = kc.shape[1]
+        xn = L.rms_norm(x, bp_l["attn_norm"], cfg.rms_eps)
+        q, k, v = _qkv_token(bp_l, cfg, xn, length)
+        if win > 0 and alloc == win:  # ring cache
+            slot = length % win
+            kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, slot, 0, 0))
+            vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, slot, 0, 0))
+            # ring slots hold the last `win` tokens; all valid once filled
+            valid_len = jnp.minimum(length + 1, win)
+            out = L.ring_decode_attention(q, kc, vc, valid_len)
+        else:
+            kc = jax.lax.dynamic_update_slice(kc, k.astype(kc.dtype), (0, length, 0, 0))
+            vc = jax.lax.dynamic_update_slice(vc, v.astype(vc.dtype), (0, length, 0, 0))
+            lengths = jnp.full((x.shape[0],), length + 1, jnp.int32)
+            out = L.decode_attention(q, kc, vc, lengths, window=win)
+        a = jnp.einsum("bshk,hkd->bsd", out, bp_l["wo"].astype(x.dtype))
+        s, conv_l, state_l = _ssm_decode_layer(bp_l, cfg, x, conv[i], state[i])
+        a = L.rms_norm(a, bp_l["fuse_norm_attn"], cfg.rms_eps)
+        s = L.rms_norm(s, bp_l["fuse_norm_ssm"], cfg.rms_eps)
+        x = x + 0.5 * (a + s)
+        x = x + _mlp(bp_l, cfg, x)
+        new_attn.append((kc, vc))
+        new_conv.append(conv_l)
+        new_state.append(state_l)
+    ssm_state = SSMServeState(jnp.stack(new_conv), jnp.stack(new_state), length + 1)
+    return x, HybridCaches(attn=tuple(new_attn), ssm=ssm_state)
+
+
+def prefill(params, cfg: ModelConfig, tokens: Array, max_len: int, paged: bool = False):
+    """Run the prompt through the model, filling caches. Returns (last_logits, cache).
+
+    For attention families this reuses the training forward to produce K/V per
+    layer (collected via scan outputs), then writes them into the cache."""
+    from repro.models.transformer import _attention, forward
+
+    B, S = tokens.shape[:2]
+    cache = init_cache(cfg, B, max_len, paged=paged)
+    x = _embed_tokens(params, cfg, tokens if cfg.n_codebooks else tokens)
+    # same sequence-parallel residual-stream sharding as training
+    x = constrain_act(x, "act")
+    positions = jnp.arange(S)
+
+    if cfg.family in ("dense", "moe"):
+        n_dense = cfg.first_k_dense if cfg.family == "moe" else 0
+
+        def write_layer(cache, k, v, li):
+            """Write one layer's prompt K/V immediately (bounded lifetimes)."""
+            if not paged:
+                return cache.update_layer(k, v, li)
+            Pg = cache.page_size
+            n_blocks = -(-S // Pg)
+            kp, vp = cache.k_pages, cache.v_pages
+            for b in range(n_blocks):
+                s0 = b * Pg
+                blk = min(Pg, S - s0)
+                page_ids = cache.page_table[:, b]  # (B,)
+                blk_k = k[:, s0 : s0 + blk].astype(kp.dtype)  # (B, blk, KH, hd)
+                blk_v = v[:, s0 : s0 + blk].astype(vp.dtype)
+
+                def wr(pages, pid, blk_x):
+                    def one(p, i, t):  # p (pool, P, KH, hd)
+                        return p.at[i, :blk].set(t)
+
+                    return jax.vmap(one)(pages, pid, blk_x)
+
+                kp = kp.at[li].set(wr(kp[li], page_ids, blk_k))
+                vp = vp.at[li].set(wr(vp[li], page_ids, blk_v))
+            return PagedKVCache(kp, vp, cache.page_table, cache.lengths)
+
+        gl = 0
+        if n_dense:
+            for i in range(n_dense):
+                bp_l = _layer_slice(params["dense_blocks"], i)
+                a, (k, v) = _attention(bp_l, cfg, x, positions, cfg.attn_window(gl))
+                x = constrain_act(x + a, "act")
+                x = constrain_act(x + _mlp(bp_l, cfg, x), "act")
+                cache = write_layer(cache, k, v, gl)
+                gl += 1
+        for i in range(cfg.n_layers - n_dense):
+            bp_l = _layer_slice(params["blocks"], i)
+            a, (k, v) = _attention(bp_l, cfg, x, positions, cfg.attn_window(gl))
+            x = constrain_act(x + a, "act")
+            if cfg.family == "moe":
+                f, _ = _moe_ffn(bp_l, cfg, x)
+                x = constrain_act(x + f, "act")
+            else:
+                x = constrain_act(x + _mlp(bp_l, cfg, x), "act")
+            cache = write_layer(cache, k, v, gl)
+            gl += 1
+        if paged:
+            cache = PagedKVCache(
+                cache.k_pages, cache.v_pages, cache.page_table,
+                jnp.full((B,), S, jnp.int32),
+            )
+        else:
+            cache = cache.advanced(S)
+    elif cfg.family == "ssm":
+        convs, states = [], []
+        for i in range(cfg.n_layers):
+            bp_l = _layer_slice(params["blocks"], i)
+            y, conv_c, state = _ssm_prefill_layer(bp_l, cfg, x)
+            x = constrain_act(x + y, "act")
+            convs.append(conv_c)
+            states.append(state)
+        cache = SSMServeState(jnp.stack(convs), jnp.stack(states), jnp.asarray(S, jnp.int32))
+    else:  # hybrid
+        new_attn, convs, states = [], [], []
+        for i in range(cfg.n_layers):
+            bp_l = _layer_slice(params["blocks"], i)
+            win = cfg.attn_window(i)
+            a, (k, v) = _attention(bp_l, cfg, x, positions, win)
+            s, conv_c, state = _ssm_prefill_layer(bp_l, cfg, x)
+            a = L.rms_norm(a, bp_l["fuse_norm_attn"], cfg.rms_eps)
+            s = L.rms_norm(s, bp_l["fuse_norm_ssm"], cfg.rms_eps)
+            x = constrain_act(x + 0.5 * (a + s), "act")
+            x = constrain_act(x + _mlp(bp_l, cfg, x), "act")
+            kc0, vc0 = cache.attn[i]
+            alloc = kc0.shape[1]
+            if win > 0 and alloc == win:
+                take = min(win, S)
+                # last `take` tokens land at ring slots (S - take + j) % win
+                idxs = (jnp.arange(S - take, S)) % win
+                kc0 = kc0.at[:, idxs].set(k[:, -take:].astype(kc0.dtype))
+                vc0 = vc0.at[:, idxs].set(v[:, -take:].astype(vc0.dtype))
+            else:
+                kc0 = jax.lax.dynamic_update_slice(kc0, k.astype(kc0.dtype), (0, 0, 0, 0))
+                vc0 = jax.lax.dynamic_update_slice(vc0, v.astype(vc0.dtype), (0, 0, 0, 0))
+            new_attn.append((kc0, vc0))
+            convs.append(conv_c)
+            states.append(state)
+        cache = HybridCaches(
+            attn=tuple(new_attn),
+            ssm=SSMServeState(jnp.stack(convs), jnp.stack(states), jnp.asarray(S, jnp.int32)),
+        )
+
+    # project only the last position: full-sequence logits at 32k prefill are
+    # a multi-GiB tensor that is immediately sliced away (§Perf iteration 4)
+    x_last = L.rms_norm(x[:, -1:], params["final_norm"], cfg.rms_eps)
+    logits = project_logits(params, cfg, x_last)
+    return logits[:, 0], cache

@@ -1,0 +1,164 @@
+"""Mamba-2 SSD (state-space duality) layer — chunked scan + O(1)-state decode.
+
+Follows the minimal SSD formulation (Dao & Gu 2024, arXiv:2405.21060):
+within each chunk of length Q the output is a masked quadratic form
+(attention-like, maps to the MXU); across chunks a low-rank state
+(heads, head_dim, state) is carried by an associative recurrence. Training /
+prefill use `ssd_scan`; decode uses `ssd_decode_step` with a single recurrent
+state update per token — this is why the SSM archs serve `long_500k`.
+
+Parameter layout per layer (n_groups = 1):
+  in_proj : (d, 2*d_inner + 2*state + heads)   -> z, x, B, C, dt
+  conv_w  : (conv_width, d_inner + 2*state)    causal depthwise conv
+  A_log   : (heads,)   dt_bias : (heads,)   D : (heads,)
+  norm_w  : (d_inner,)  (gated RMSNorm)      out_proj : (d_inner, d)
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class SSMState(NamedTuple):
+    conv: Array  # (B, conv_width-1, d_inner + 2*state) rolling conv inputs
+    ssm: Array  # (B, heads, head_dim, state)
+
+
+def _segsum(x: Array) -> Array:
+    """log-space segment sums: out[..., i, j] = sum_{k in (j, i]} x[..., k]."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_scan(
+    xbc: Array,  # (B, S, d_inner + 2*state) post-conv activations
+    dt: Array,  # (B, S, H) softplus'd step sizes
+    A: Array,  # (H,) negative decay rates
+    d_inner: int,
+    n_state: int,
+    head_dim: int,
+    chunk: int,
+    initial_state: Array | None = None,
+) -> tuple[Array, Array]:
+    """Chunked SSD. Returns (y (B,S,d_inner), final_state (B,H,P,N))."""
+    Bsz, S, _ = xbc.shape
+    H = d_inner // head_dim
+    P, N = head_dim, n_state
+
+    x = xbc[..., :d_inner].reshape(Bsz, S, H, P)
+    Bmat = xbc[..., d_inner : d_inner + N]  # (B,S,N) single group
+    Cmat = xbc[..., d_inner + N :]  # (B,S,N)
+
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    nC = (S + pad) // chunk
+    Q = chunk
+
+    xc = x.reshape(Bsz, nC, Q, H, P)
+    Bc = Bmat.reshape(Bsz, nC, Q, N)
+    Cc = Cmat.reshape(Bsz, nC, Q, N)
+    dtc = dt.reshape(Bsz, nC, Q, H)
+
+    dA = dtc * A[None, None, None, :]  # (B,nC,Q,H) log decay per step
+    dA_cum = jnp.cumsum(dA, axis=2)  # within-chunk cumulative
+
+    # ---- intra-chunk (quadratic, attention-like) ----
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))  # (B,nC,H,Q,Q)
+    CB = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc, preferred_element_type=jnp.float32)
+    scores = CB[:, :, None] * L  # (B,nC,H,Q,Q)
+    xdt = xc * dtc[..., None]  # weight inputs by dt
+    y_diag = jnp.einsum(
+        "bchqk,bckhp->bcqhp", scores, xdt.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    # ---- chunk states: contribution of each chunk to the carried state ----
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # (B,nC,Q,H)
+    states = jnp.einsum(
+        "bcqn,bcqh,bcqhp->bchpn", Bc, (dtc * decay_to_end).astype(jnp.float32),
+        xc.astype(jnp.float32), preferred_element_type=jnp.float32,
+    )  # (B,nC,H,P,N)
+
+    # ---- inter-chunk recurrence over chunk states ----
+    chunk_decay = jnp.exp(jnp.sum(dA, axis=2))  # (B,nC,H)
+
+    def step(carry, inp):
+        s_new, decay = inp  # (B,H,P,N), (B,H)
+        carry = carry * decay[..., None, None] + s_new
+        return carry, carry
+
+    init = (
+        initial_state.astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((Bsz, H, P, N), jnp.float32)
+    )
+    states_t = jnp.moveaxis(states, 1, 0)  # (nC,B,H,P,N)
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)  # (nC,B,H)
+    final_state, all_states = jax.lax.scan(step, init, (states_t, decay_t))
+    # state entering chunk c = all_states[c-1]; for c=0 it's `init`
+    prev_states = jnp.concatenate([init[None], all_states[:-1]], axis=0)
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B,nC,H,P,N)
+
+    # ---- inter-chunk output: y_off = C @ (decayed prev state) ----
+    state_decay = jnp.exp(dA_cum)  # decay from chunk start to position q
+    y_off = jnp.einsum(
+        "bcqn,bcqh,bchpn->bcqhp", Cc, state_decay.astype(jnp.float32), prev_states,
+        preferred_element_type=jnp.float32,
+    )
+
+    y = (y_diag + y_off).reshape(Bsz, nC * Q, H, P)[:, :S]
+    return y.reshape(Bsz, S, d_inner), final_state
+
+
+def ssd_decode_step(
+    xbc: Array,  # (B, d_inner + 2*state) single-token post-conv activations
+    dt: Array,  # (B, H)
+    A: Array,  # (H,)
+    state: Array,  # (B, H, P, N)
+    d_inner: int,
+    n_state: int,
+    head_dim: int,
+) -> tuple[Array, Array]:
+    """Recurrent single-token update: h' = e^(dt*A) h + dt * B x ; y = C h'."""
+    Bsz = xbc.shape[0]
+    H = d_inner // head_dim
+    P, N = head_dim, n_state
+    x = xbc[:, :d_inner].reshape(Bsz, H, P)
+    Bv = xbc[:, d_inner : d_inner + N]
+    Cv = xbc[:, d_inner + N :]
+    decay = jnp.exp(dt * A[None, :])  # (B,H)
+    upd = jnp.einsum("bn,bh,bhp->bhpn", Bv.astype(jnp.float32), dt.astype(jnp.float32),
+                     x.astype(jnp.float32))
+    state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cv.astype(jnp.float32), state)
+    return y.reshape(Bsz, d_inner), state
+
+
+def causal_conv(x: Array, conv_w: Array, cache: Array | None = None):
+    """Depthwise causal conv, width W. x (B,S,C), conv_w (W,C).
+
+    Returns (y (B,S,C), new_cache (B,W-1,C)) — cache carries the last W-1
+    inputs for streaming decode.
+    """
+    W = conv_w.shape[0]
+    if cache is None:
+        xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+    ys = sum(
+        xp[:, i : i + x.shape[1], :] * conv_w[i][None, None, :] for i in range(W)
+    )
+    new_cache = xp[:, xp.shape[1] - (W - 1) :, :]
+    return jax.nn.silu(ys), new_cache

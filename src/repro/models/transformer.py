@@ -1,0 +1,387 @@
+"""Decoder LM assembly for every assigned family: init, train forward, serve.
+
+Layer weights are STACKED along a leading (n_layers,) axis and driven by
+`lax.scan` (+ optional remat) — one layer is traced/compiled once regardless
+of depth, which keeps 60-layer dry-run compiles tractable and is the layout
+XLA pipelines best. MoE configs with `first_k_dense` use two stacks.
+
+Serve paths:
+  prefill       chunked attention, cache written per layer (contiguous cache)
+  decode        single-token step over contiguous / paged / ring caches;
+                SSM & hybrid carry O(1) recurrent state
+Hybrid (Hymba) decode is unrolled per layer so sliding-window layers keep a
+small ring cache while global layers keep the full-context cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.config import ModelConfig
+from repro.models.kvcache import KVCache, PagedKVCache, RingKVCache
+from repro.sharding.rules import MeshAxes, activation_spec, constrain, current_mesh_axes
+
+Array = jax.Array
+
+
+def _c(x: Array, kind: str) -> Array:
+    """Constrain activation sharding if a mesh context is ambient."""
+    ctx = current_mesh_axes()
+    if ctx is None:
+        return x
+    _, axes = ctx
+    return constrain(x, activation_spec(kind, axes))
+
+
+# ===========================================================================
+# Parameter initialization
+# ===========================================================================
+
+
+def _attn_params(key, cfg: ModelConfig, dtype, n_layers):
+    ks = jax.random.split(key, 4)
+    d, H, KH, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": L.dense_init(ks[0], (n_layers, d, H, hd), dtype),
+        "wk": L.dense_init(ks[1], (n_layers, d, KH, hd), dtype),
+        "wv": L.dense_init(ks[2], (n_layers, d, KH, hd), dtype),
+        "wo": L.dense_init(ks[3], (n_layers, H, hd, d), dtype, scale=0.02),
+        "attn_norm": jnp.ones((n_layers, d), dtype),
+    }
+
+
+def _mlp_params(key, cfg: ModelConfig, dtype, n_layers):
+    ks = jax.random.split(key, 3)
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": L.dense_init(ks[0], (n_layers, d, ff), dtype),
+        "w_up": L.dense_init(ks[1], (n_layers, d, ff), dtype),
+        "w_down": L.dense_init(ks[2], (n_layers, ff, d), dtype, scale=0.02),
+        "mlp_norm": jnp.ones((n_layers, d), dtype),
+    }
+
+
+def _moe_params(key, cfg: ModelConfig, dtype, n_layers):
+    ks = jax.random.split(key, 4)
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": L.dense_init(ks[0], (n_layers, d, E), dtype, scale=0.02),
+        "w_gate": L.dense_init(ks[1], (n_layers, E, d, ff), dtype, scale=1 / math.sqrt(d)),
+        "w_up": L.dense_init(ks[2], (n_layers, E, d, ff), dtype, scale=1 / math.sqrt(d)),
+        "w_down": L.dense_init(ks[3], (n_layers, E, ff, d), dtype, scale=0.02),
+        "mlp_norm": jnp.ones((n_layers, d), dtype),
+    }
+
+
+def _ssm_params(key, cfg: ModelConfig, dtype, n_layers):
+    ks = jax.random.split(key, 4)
+    d, di, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    proj_in = 2 * di + 2 * N + H
+    return {
+        "ssm_norm_in": jnp.ones((n_layers, d), dtype),
+        "in_proj": L.dense_init(ks[0], (n_layers, d, proj_in), dtype),
+        "conv_w": L.dense_init(ks[1], (n_layers, cfg.ssm_conv, di + 2 * N), dtype, scale=0.5),
+        "A_log": jnp.log(
+            jnp.tile(jnp.linspace(1.0, 16.0, H)[None], (n_layers, 1))
+        ).astype(dtype),
+        "dt_bias": jnp.zeros((n_layers, H), dtype),
+        "D": jnp.ones((n_layers, H), dtype),
+        "gate_norm": jnp.ones((n_layers, di), dtype),
+        "out_proj": L.dense_init(ks[3], (n_layers, di, d), dtype, scale=0.02),
+    }
+
+
+def init_params(key: Array, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    Lc = cfg.n_layers
+    params: dict[str, Any] = {}
+    if cfg.n_codebooks:
+        params["codebook_embed"] = (
+            jax.random.normal(keys[0], (cfg.n_codebooks, cfg.vocab_size, cfg.d_model), jnp.float32)
+            * 0.02
+        ).astype(dtype)
+    else:
+        params["embed"] = (
+            jax.random.normal(keys[0], (cfg.vocab_size, cfg.d_model), jnp.float32) * 0.02
+        ).astype(dtype)
+
+    blocks: dict[str, Any] = {}
+    if cfg.family == "dense":
+        blocks.update(_attn_params(keys[1], cfg, dtype, Lc))
+        blocks.update(_mlp_params(keys[2], cfg, dtype, Lc))
+    elif cfg.family == "moe":
+        n_moe = Lc - cfg.first_k_dense
+        blocks.update(_attn_params(keys[1], cfg, dtype, n_moe))
+        blocks.update(_moe_params(keys[2], cfg, dtype, n_moe))
+        if cfg.first_k_dense:
+            dense: dict[str, Any] = {}
+            dense.update(_attn_params(keys[3], cfg, dtype, cfg.first_k_dense))
+            dense.update(_mlp_params(keys[4], cfg, dtype, cfg.first_k_dense))
+            params["dense_blocks"] = dense
+    elif cfg.family == "ssm":
+        blocks.update(_ssm_params(keys[1], cfg, dtype, Lc))
+    elif cfg.family == "hybrid":
+        blocks.update(_attn_params(keys[1], cfg, dtype, Lc))
+        blocks.update(_ssm_params(keys[2], cfg, dtype, Lc))
+        blocks.update(_mlp_params(keys[3], cfg, dtype, Lc))
+        blocks["fuse_norm_attn"] = jnp.ones((Lc, cfg.d_model), dtype)
+        blocks["fuse_norm_ssm"] = jnp.ones((Lc, cfg.d_model), dtype)
+    params["blocks"] = blocks
+    params["final_norm"] = jnp.ones((cfg.d_model,), dtype)
+    if cfg.n_codebooks:
+        params["codebook_head"] = L.dense_init(
+            keys[5], (cfg.n_codebooks, cfg.d_model, cfg.vocab_size), dtype, scale=0.02
+        )
+    elif not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(keys[5], (cfg.d_model, cfg.vocab_size), dtype, scale=0.02)
+    return params
+
+
+def param_count(params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+
+
+# ===========================================================================
+# Embedding / frontends (stubs per assignment: precomputed embeddings)
+# ===========================================================================
+
+
+def embed_inputs(params: dict, cfg: ModelConfig, batch: dict) -> tuple[Array, Array]:
+    """Returns (x (B,S,d), positions (S,)). Frontends are STUBS: vision/audio
+    inputs arrive as precomputed embeddings/codes in the batch dict."""
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.n_codebooks:  # audio: codes (B, S, K)
+        codes = batch["codes"]
+        emb = params["codebook_embed"]  # (K, V, d)
+        x = sum(
+            jnp.take(emb[k], codes[..., k], axis=0) for k in range(cfg.n_codebooks)
+        )
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0)  # (B,S,d)
+        if cfg.frontend == "vision":
+            patches = batch["patch_embeds"].astype(dtype)  # (B,P,d) precomputed
+            x = jnp.concatenate([patches, x], axis=1)
+    S = x.shape[1]
+    return x.astype(dtype), jnp.arange(S)
+
+
+# ===========================================================================
+# Blocks (train / prefill mode: full sequences)
+# ===========================================================================
+
+
+def _attention(bp, cfg: ModelConfig, x, positions, window, q_chunk=512, kv_chunk=1024):
+    xn = L.rms_norm(x, bp["attn_norm"], cfg.rms_eps)
+    q = jnp.einsum("bsd,dhk->bshk", xn, bp["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", xn, bp["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", xn, bp["wv"].astype(x.dtype))
+    cos, sin = L.rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+    q = L.apply_rope(q, cos, sin)
+    k = L.apply_rope(k, cos, sin)
+    out = L.chunked_attention(
+        q, k, v, positions, positions, window=window, q_chunk=q_chunk, kv_chunk=kv_chunk
+    )
+    return jnp.einsum("bshk,hkd->bsd", out, bp["wo"].astype(x.dtype)), (k, v)
+
+
+def _mlp(bp, cfg: ModelConfig, x):
+    xn = L.rms_norm(x, bp["mlp_norm"], cfg.rms_eps)
+    return L.swiglu(xn, bp["w_gate"], bp["w_up"], bp["w_down"])
+
+
+def _moe_ffn(bp, cfg: ModelConfig, x):
+    """Grouped dispatch: one group per sequence (shards over data axes)."""
+    xn = L.rms_norm(x, bp["mlp_norm"], cfg.rms_eps)
+    out, aux = moe_lib.moe_block(
+        xn,
+        bp["router"],
+        bp["w_gate"],
+        bp["w_up"],
+        bp["w_down"],
+        cfg.top_k,
+        cfg.capacity_factor,
+    )
+    return out, aux
+
+
+def _ssm_mix(bp, cfg: ModelConfig, x, state=None, chunk=None):
+    """Full-sequence SSD mixer. Returns (out (B,S,d), final_state)."""
+    xn = L.rms_norm(x, bp["ssm_norm_in"], cfg.rms_eps)
+    proj = jnp.einsum("bsd,dp->bsp", xn, bp["in_proj"].astype(x.dtype))
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = proj[..., :di]
+    xbc = proj[..., di : di + di + 2 * N]
+    dt_raw = proj[..., di + di + 2 * N :]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + bp["dt_bias"].astype(jnp.float32))
+    xbc_conv, _ = ssm_lib.causal_conv(xbc, bp["conv_w"].astype(x.dtype))
+    A = -jnp.exp(bp["A_log"].astype(jnp.float32))
+    y, final_state = ssm_lib.ssd_scan(
+        xbc_conv, dt, A, di, N, cfg.ssm_head_dim,
+        chunk or cfg.ssm_chunk, initial_state=state,
+    )
+    # skip connection D * x and gated norm
+    xin = xbc_conv[..., :di]
+    y = y + (xin.astype(jnp.float32)
+             * jnp.repeat(bp["D"].astype(jnp.float32), cfg.ssm_head_dim, axis=-1))
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    y = L.rms_norm(y, bp["gate_norm"], cfg.rms_eps)
+    out = jnp.einsum("bsi,id->bsd", y, bp["out_proj"].astype(x.dtype))
+    return out, final_state
+
+
+def dense_block(bp, cfg: ModelConfig, x, positions, window):
+    a, _ = _attention(bp, cfg, x, positions, window)
+    x = x + _c(a, "act")
+    x = x + _c(_mlp(bp, cfg, x), "act")
+    return x
+
+
+def moe_block(bp, cfg: ModelConfig, x, positions, window):
+    a, _ = _attention(bp, cfg, x, positions, window)
+    x = x + _c(a, "act")
+    f, aux = _moe_ffn(bp, cfg, x)
+    x = x + _c(f, "act")
+    return x, aux
+
+
+def ssm_block(bp, cfg: ModelConfig, x, positions, window):
+    y, _ = _ssm_mix(bp, cfg, x)
+    return x + _c(y, "act")
+
+
+def hybrid_block(bp, cfg: ModelConfig, x, positions, window):
+    """Hymba: attention and SSM heads in parallel on the same input, fused."""
+    a, _ = _attention(bp, cfg, x, positions, window)
+    s, _ = _ssm_mix(bp, cfg, x)
+    a = L.rms_norm(a, bp["fuse_norm_attn"], cfg.rms_eps)
+    s = L.rms_norm(s, bp["fuse_norm_ssm"], cfg.rms_eps)
+    x = x + _c(0.5 * (a + s), "act")
+    x = x + _c(_mlp(bp, cfg, x), "act")
+    return x
+
+
+# ===========================================================================
+# Full forward (train)
+# ===========================================================================
+
+
+def _layer_windows(cfg: ModelConfig, n_layers: int, offset: int = 0) -> Array:
+    return jnp.asarray(
+        [cfg.attn_window(i + offset) for i in range(n_layers)], jnp.int32
+    )
+
+
+def _scan_blocks(block_fn, stacked, x, positions, windows, remat: bool,
+                 has_aux=False, unroll: bool = False):
+    def body(carry, layer):
+        bp, win = layer
+        if has_aux:
+            h, aux = carry
+            h2, a = block_fn(bp, h, positions, win)
+            return (h2, aux + a), None
+        return block_fn(bp, carry, positions, win), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    init = (x, jnp.zeros((), jnp.float32)) if has_aux else x
+    if unroll:
+        # python-level unroll: used by the dry-run cost measurement (XLA's
+        # cost analysis counts while bodies once) — numerically identical.
+        n = windows.shape[0]
+        carry = init
+        for i in range(n):
+            layer = (jax.tree_util.tree_map(lambda p: p[i], stacked), windows[i])
+            carry, _ = body(carry, layer)
+        return carry
+    out, _ = jax.lax.scan(body, init, (stacked, windows))
+    return out
+
+
+def forward(
+    params: dict, cfg: ModelConfig, batch: dict, remat: bool = True,
+    unroll: bool = False,
+) -> tuple[Array, Array]:
+    """Train/eval forward pass. Returns (logits, moe_aux_loss).
+
+    logits: (B, S, V) — or (B, S, K, V) for codebook (audio) models."""
+    x, positions = embed_inputs(params, cfg, batch)
+    x = _c(x, "act")
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.family == "dense":
+        windows = _layer_windows(cfg, cfg.n_layers)
+        fn = lambda bp, h, p, w: dense_block(bp, cfg, h, p, w)
+        x = _scan_blocks(fn, params["blocks"], x, positions, windows, remat, unroll=unroll)
+    elif cfg.family == "moe":
+        if cfg.first_k_dense:
+            wd = _layer_windows(cfg, cfg.first_k_dense)
+            fn_d = lambda bp, h, p, w: dense_block(bp, cfg, h, p, w)
+            x = _scan_blocks(fn_d, params["dense_blocks"], x, positions, wd, remat, unroll=unroll)
+        n_moe = cfg.n_layers - cfg.first_k_dense
+        wm = _layer_windows(cfg, n_moe, offset=cfg.first_k_dense)
+        fn_m = lambda bp, h, p, w: moe_block(bp, cfg, h, p, w)
+        x, aux = _scan_moe(fn_m, params["blocks"], x, positions, wm, remat, unroll=unroll)
+    elif cfg.family == "ssm":
+        windows = jnp.zeros(cfg.n_layers, jnp.int32)
+        fn = lambda bp, h, p, w: ssm_block(bp, cfg, h, p, w)
+        x = _scan_blocks(fn, params["blocks"], x, positions, windows, remat, unroll=unroll)
+    elif cfg.family == "hybrid":
+        windows = _layer_windows(cfg, cfg.n_layers)
+        fn = lambda bp, h, p, w: hybrid_block(bp, cfg, h, p, w)
+        x = _scan_blocks(fn, params["blocks"], x, positions, windows, remat, unroll=unroll)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.rms_eps)
+    logits = project_logits(params, cfg, x)
+    return logits, aux
+
+
+def _scan_moe(block_fn, stacked, x, positions, windows, remat: bool, unroll: bool = False):
+    return _scan_blocks(
+        block_fn, stacked, x, positions, windows, remat, has_aux=True, unroll=unroll
+    )
+
+
+def project_logits(params: dict, cfg: ModelConfig, x: Array) -> Array:
+    if cfg.n_codebooks:
+        logits = jnp.einsum(
+            "bsd,kdv->bskv", x, params["codebook_head"].astype(x.dtype)
+        )
+        return logits
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+    return _c(logits, "logits")
+
+
+def lm_loss(params: dict, cfg: ModelConfig, batch: dict, remat: bool = True,
+            unroll: bool = False):
+    """Next-token cross entropy (+0.01 * MoE aux). Returns (loss, metrics)."""
+    logits, aux = forward(params, cfg, batch, remat=remat, unroll=unroll)
+    if cfg.n_codebooks:
+        labels = batch["codes"][:, 1:]  # (B,S-1,K)
+        lg = logits[:, :-1]
+        lp = jax.nn.log_softmax(lg.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+        loss = jnp.mean(nll)
+    else:
+        labels = batch["tokens"][:, 1:]
+        lg = logits[:, :-1] if cfg.frontend != "vision" else logits[:, batch["patch_embeds"].shape[1] :][:, :-1]
+        lp = jax.nn.log_softmax(lg.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+        mask = batch.get("loss_mask")
+        if mask is not None:
+            nll = nll * mask[:, 1:]
+            loss = jnp.sum(nll) / jnp.maximum(jnp.sum(mask[:, 1:]), 1.0)
+        else:
+            loss = jnp.mean(nll)
+    total = loss + 0.01 * aux
+    return total, {"nll": loss, "moe_aux": aux}

@@ -1,0 +1,19 @@
+from repro.sharding.rules import (
+    MeshAxes,
+    activation_spec,
+    axis_if_divisible,
+    param_specs,
+    set_mesh_context,
+    constrain,
+    current_mesh_axes,
+)
+
+__all__ = [
+    "MeshAxes",
+    "activation_spec",
+    "axis_if_divisible",
+    "param_specs",
+    "set_mesh_context",
+    "constrain",
+    "current_mesh_axes",
+]

@@ -1,0 +1,233 @@
+"""Logical-axis sharding rules -> PartitionSpecs for params and activations.
+
+Strategy (FSDP x TP, pod-extended):
+  * batch/rows  -> the data axes ("pod", "data")  [DP]
+  * d_model     -> the data axes                  [FSDP / ZeRO-3 param shards]
+  * heads / d_ff / experts / vocab -> "model"     [TP / EP]
+  * head-count axes that don't divide the model axis fall back to sharding
+    head_dim (all assigned archs have head_dim % 16 == 0), else replicate —
+    `axis_if_divisible` encodes the fallback chain.
+
+An ambient mesh context (contextvar) lets model code call `constrain(x, spec)`
+without threading a mesh through every function; on hosts with no mesh set the
+call is a no-op, so CPU smoke tests run the identical code path.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    data: tuple[str, ...] = ("data",)  # ("pod", "data") for multi-pod
+    model: str = "model"
+
+
+_CTX: contextvars.ContextVar[tuple[Mesh, MeshAxes] | None] = contextvars.ContextVar(
+    "repro_mesh_ctx", default=None
+)
+
+
+@contextlib.contextmanager
+def set_mesh_context(mesh: Mesh, axes: MeshAxes):
+    token = _CTX.set((mesh, axes))
+    try:
+        with mesh:
+            yield
+    finally:
+        _CTX.reset(token)
+
+
+def current_mesh_axes() -> tuple[Mesh, MeshAxes] | None:
+    return _CTX.get()
+
+
+def constrain(x: Array, spec: P) -> Array:
+    """with_sharding_constraint under the ambient mesh; no-op without one."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, _ = ctx
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_act(x: Array, kind: str) -> Array:
+    """Constrain to a named activation layout under the ambient mesh (no-op
+    without one) — usable from any model module without threading a mesh.
+    Axes that don't divide the corresponding dim are dropped per-leaf."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, axes = ctx
+    spec = activation_spec(kind, axes)
+    fixed = []
+    for dim, names in zip(x.shape, tuple(spec) + (None,) * (x.ndim - len(spec))):
+        fixed.append(names if names and dim % _axis_size(mesh, names) == 0 else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*fixed)))
+
+
+def _axis_size(mesh: Mesh, names: tuple[str, ...] | str | None) -> int:
+    if names is None:
+        return 1
+    if isinstance(names, str):
+        names = (names,)
+    size = 1
+    for n in names:
+        size *= mesh.shape[n]
+    return size
+
+
+def axis_if_divisible(dim: int, names, mesh: Mesh):
+    """Return `names` if dim divides the axis product, else None."""
+    if names is None or dim == 0:
+        return None
+    return names if dim % _axis_size(mesh, names) == 0 else None
+
+
+def batch_spec(axes: MeshAxes) -> Any:
+    return axes.data
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules (pattern-matched on the leaf's path name)
+# ---------------------------------------------------------------------------
+
+
+def _leaf_spec(path: str, shape: tuple[int, ...], mesh: Mesh, axes: MeshAxes) -> P:
+    d = axes.data  # FSDP axes
+    m = axes.model
+    fsdp = lambda n: axis_if_divisible(n, d, mesh)
+    tp = lambda n: axis_if_divisible(n, m, mesh)
+    name = path.split("/")[-1]
+    L = None  # layer-stacked leading axis is never sharded
+
+    def heads_spec(n_heads_dim, head_dim_dim):
+        """Shard heads if divisible, else head_dim, else neither."""
+        if tp(n_heads_dim):
+            return m, None
+        if tp(head_dim_dim):
+            return None, m
+        return None, None
+
+    if name in ("embed",):  # (V, d)
+        return P(tp(shape[0]), fsdp(shape[1]))
+    if name == "codebook_embed":  # (K, V, d)
+        return P(None, tp(shape[1]), fsdp(shape[2]))
+    if name == "lm_head":  # (d, V)
+        return P(fsdp(shape[0]), tp(shape[1]))
+    if name == "codebook_head":  # (K, d, V)
+        return P(None, fsdp(shape[1]), tp(shape[2]))
+    if name in ("wq", "wk", "wv"):  # (L, d, H, hd)
+        hs, ds = heads_spec(shape[2], shape[3])
+        return P(L, fsdp(shape[1]), hs, ds)
+    if name == "wo":  # (L, H, hd, d)
+        hs, ds = heads_spec(shape[1], shape[2])
+        return P(L, hs, ds, fsdp(shape[3]))
+    if name in ("w_gate", "w_up"):
+        if len(shape) == 4:  # MoE (L, E, d, ff)
+            return P(L, tp(shape[1]), fsdp(shape[2]), None)
+        return P(L, fsdp(shape[1]), tp(shape[2]))  # dense (L, d, ff)
+    if name == "w_down":
+        if len(shape) == 4:  # MoE (L, E, ff, d)
+            return P(L, tp(shape[1]), None, fsdp(shape[3]))
+        return P(L, tp(shape[1]), fsdp(shape[2]))  # dense (L, ff, d)
+    if name == "router":  # (L, d, E)
+        return P(L, fsdp(shape[1]), tp(shape[2]))
+    if name == "in_proj":  # (L, d, proj_dim)
+        return P(L, fsdp(shape[1]), tp(shape[2]))
+    if name == "out_proj":  # (L, d_inner, d)
+        return P(L, tp(shape[1]), fsdp(shape[2]))
+    if name == "patch_proj":  # (d_in, d)
+        return P(fsdp(shape[0]), tp(shape[1]))
+    # norms, conv weights, A_log, dt_bias, D, fusion scales: replicated
+    return P(*([None] * len(shape)))
+
+
+def param_specs(params: Any, mesh: Mesh, axes: MeshAxes) -> Any:
+    """PartitionSpec pytree matching `params` (works on ShapeDtypeStructs too)."""
+
+    def spec(path, leaf):
+        pstr = "/".join(
+            p.key if hasattr(p, "key") else str(p) for p in path
+        )
+        return _leaf_spec(pstr, leaf.shape, mesh, axes)
+
+    return jax.tree_util.tree_map_with_path(spec, params)
+
+
+def param_shardings(params: Any, mesh: Mesh, axes: MeshAxes) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_specs(params, mesh, axes)
+    )
+
+
+def serve_cache_specs(cache: Any, mesh: Mesh, axes: MeshAxes, batch: int) -> Any:
+    """Sharding specs for any serve cache pytree.
+
+    Per leaf: shard the dim whose size equals `batch` over the data axes when
+    it divides (paged caches shard n_pages = batch*pages_per_seq instead);
+    then shard the longest remaining large dim (sequence) over `model` when it
+    divides — context-parallel decode, the fallback for batch=1 long-context.
+    """
+    d, m = axes.data, axes.model
+    dsize, msize = _axis_size(mesh, d), _axis_size(mesh, m)
+
+    def leaf_spec(path, leaf):
+        shape = leaf.shape
+        if len(shape) == 0:
+            return P()
+        spec: list = [None] * len(shape)
+        bdim = next((i for i in (0, 1) if i < len(shape) and shape[i] == batch), None)
+        if bdim is not None and batch % dsize == 0:
+            spec[bdim] = d
+        # model axis: prefer head_dim (last dim; 64/96/128 all divide 16) —
+        # keeps the KV/state tensors themselves sharded, not just transients;
+        # fall back to the longest big (sequence) dim.
+        if len(shape) >= 3 and shape[-1] % msize == 0 and shape[-1] >= msize:
+            spec[-1] = m
+        else:
+            cand = [
+                (sz, i) for i, sz in enumerate(shape)
+                if spec[i] is None and sz % msize == 0 and sz >= 512
+            ]
+            if cand:
+                _, i = max(cand)
+                spec[i] = m
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache)
+
+
+# ---------------------------------------------------------------------------
+# Activation rules
+# ---------------------------------------------------------------------------
+
+
+def activation_spec(kind: str, axes: MeshAxes) -> P:
+    """Named activation layouts used by with_sharding_constraint call sites."""
+    d = axes.data
+    m = axes.model
+    table = {
+        "tokens": P(d, None),  # (B, S)
+        # Megatron sequence parallelism: the residual stream between layers is
+        # sharded over (batch x seq). Without this, scan-carry remat storage
+        # for a 34B/60L model is O(L*B*S*d) replicated across TP ranks.
+        "act": P(d, m, None),  # (B, S, d)
+        "act_batch_only": P(d, None, None),
+        "logits": P(d, None, m),  # (B, S, V)
+        "moe_buf": P(d, m, None, None),  # (G, E, C, d) dispatch buffers
+        "moe_tokens": P(d, None, None),  # (G, N, d) grouped tokens
+        "kv_cache": P(None, d, None, None, None),  # (L, B, len, KH, hd)
+        "decode_act": P(d, None, None),  # (B, 1, d)
+        "rows": P(d, None),  # GBDT (n, m)
+    }
+    return table[kind]

@@ -1,0 +1,16 @@
+from repro.train.optimizer import AdamWState, OptConfig, adamw_init, adamw_update, lr_at
+from repro.train.train_step import TrainConfig, make_train_step, make_mvs_train_step
+from repro.train.checkpoint import save_checkpoint, restore_checkpoint
+
+__all__ = [
+    "AdamWState",
+    "OptConfig",
+    "adamw_init",
+    "adamw_update",
+    "lr_at",
+    "TrainConfig",
+    "make_train_step",
+    "make_mvs_train_step",
+    "save_checkpoint",
+    "restore_checkpoint",
+]

@@ -1,0 +1,100 @@
+"""AdamW with cosine or WSD (Warmup-Stable-Decay, MiniCPM) schedules.
+
+Optimizer state dtype is configurable: fp32 moments by default; `m_dtype` /
+`v_dtype` can be bf16 for memory-constrained runs (beyond-paper compression of
+optimizer memory — the LM-side analogue of the histogram bf16 psum).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    peak_lr: float = 3e-4
+    min_lr_ratio: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"  # cosine | wsd | constant
+    wsd_decay_frac: float = 0.1  # WSD: fraction of steps in final decay
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    m_dtype: str = "float32"
+    v_dtype: str = "float32"
+
+
+class AdamWState(NamedTuple):
+    step: Array  # () int32
+    m: Any  # pytree like params
+    v: Any
+
+
+def lr_at(cfg: OptConfig, step: Array) -> Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    if cfg.schedule == "cosine":
+        decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "wsd":
+        # stable at peak until the final decay_frac, then linear to min
+        decay_start = 1.0 - cfg.wsd_decay_frac
+        frac = jnp.clip((t - decay_start) / cfg.wsd_decay_frac, 0.0, 1.0)
+        decay = 1.0 - (1.0 - cfg.min_lr_ratio) * frac
+    elif cfg.schedule == "constant":
+        decay = jnp.ones_like(t)
+    else:
+        raise ValueError(cfg.schedule)
+    return cfg.peak_lr * warm * decay
+
+
+def adamw_init(params: Any, cfg: OptConfig) -> AdamWState:
+    zeros = lambda dt: jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.dtype(dt)), params
+    )
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros(cfg.m_dtype), v=zeros(cfg.v_dtype))
+
+
+def global_norm(tree: Any) -> Array:
+    return jnp.sqrt(
+        sum(jnp.sum(x.astype(jnp.float32) ** 2) for x in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def adamw_update(
+    params: Any, grads: Any, state: AdamWState, cfg: OptConfig
+) -> tuple[Any, AdamWState, dict]:
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) if cfg.grad_clip else 1.0
+    lr = lr_at(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    out = jax.tree_util.tree_map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree_util.tree_map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(step, new_m, new_v), {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,121 @@
+"""Training steps: standard fwd/bwd/update, and the paper-adapted MVS step.
+
+`make_train_step` builds the jit-able SPMD step used by the trainer and the
+multi-pod dry-run: params FSDP+TP sharded (sharding.rules), activations
+constrained, remat over the layer scan, AdamW update fused in.
+
+`make_mvs_train_step` is the paper's technique transplanted to LM training
+(DESIGN.md §4): a cheap forward pass yields per-sequence losses; sequences are
+Poisson-sampled with p_i ∝ ĝ_i = sqrt(g_i² + λh_i²) (paper eq. 9, with the
+per-sequence loss as g and its square as the h proxy), kept sequences are
+reweighted 1/p_i, and the masked batch is used for the (expensive) fwd+bwd —
+shrinking the effective working set exactly the way Alg. 7 compacts ELLPACK
+pages. Masking keeps shapes static for SPMD; a host-side driver can instead
+physically compact the batch (examples/mvs_lm_training.py does both).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sampling import mvs_threshold
+from repro.models.config import ModelConfig
+from repro.models.transformer import forward, init_params, lm_loss
+from repro.sharding.rules import MeshAxes, activation_spec, constrain
+from repro.train.optimizer import AdamWState, OptConfig, adamw_init, adamw_update
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    remat: bool = True
+    unroll_layers: bool = False  # python-unrolled layers (dry-run cost probe)
+    mvs_f: float = 1.0  # sequence sampling ratio (1.0 = off)
+    mvs_lambda: float = 1.0
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: AdamWState
+
+
+def init_state(key: Array, cfg: ModelConfig, opt_cfg: OptConfig) -> TrainState:
+    params = init_params(key, cfg)
+    return TrainState(params=params, opt=adamw_init(params, opt_cfg))
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig, tc: TrainConfig = TrainConfig()):
+    """Returns step(state, batch) -> (state, metrics). Pure; jit outside."""
+
+    def step(state: TrainState, batch: dict):
+        def loss_fn(p):
+            return lm_loss(p, cfg, batch, remat=tc.remat, unroll=tc.unroll_layers)
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(state.params)
+        params, opt, opt_metrics = adamw_update(state.params, grads, state.opt, opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return TrainState(params, opt), metrics
+
+    return step
+
+
+def sequence_losses(params, cfg: ModelConfig, batch: dict) -> Array:
+    """Cheap forward: per-sequence mean NLL (the gradient-magnitude proxy)."""
+    logits, _ = forward(params, cfg, batch, remat=False)
+    if cfg.n_codebooks:
+        labels = batch["codes"][:, 1:]
+        lg = logits[:, :-1]
+        lp = jax.nn.log_softmax(lg.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+        return jnp.mean(nll, axis=(1, 2))
+    labels = batch["tokens"][:, 1:]
+    lg = logits[:, :-1] if cfg.frontend != "vision" else logits[:, batch["patch_embeds"].shape[1] :][:, :-1]
+    lp = jax.nn.log_softmax(lg.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll, axis=1)
+
+
+def mvs_sequence_mask(key: Array, seq_loss: Array, f: float, lam: float):
+    """Paper eq. 9 over sequences: ĝ = sqrt(g² + λ h²), g = seq loss, h = g²-proxy."""
+    g = seq_loss
+    h = seq_loss * seq_loss
+    g_hat = jnp.sqrt(g * g + lam * h * h)
+    mu = mvs_threshold(g_hat, f * g.shape[0])
+    p = jnp.clip(g_hat / jnp.maximum(mu, 1e-30), 0.0, 1.0)
+    keep = jax.random.uniform(key, g.shape) < p
+    weight = jnp.where(keep, 1.0 / jnp.maximum(p, 1e-12), 0.0)
+    return keep, weight
+
+
+def make_mvs_train_step(cfg: ModelConfig, opt_cfg: OptConfig, tc: TrainConfig):
+    """Gradient-based sequence-sampled training step (paper Alg. 7 for LMs)."""
+    assert 0.0 < tc.mvs_f <= 1.0
+
+    def step(state: TrainState, batch: dict, key: Array):
+        seq_loss = sequence_losses(state.params, cfg, batch)
+        keep, weight = mvs_sequence_mask(key, seq_loss, tc.mvs_f, tc.mvs_lambda)
+
+        def loss_fn(p):
+            logits, aux = forward(p, cfg, batch, remat=tc.remat)
+            labels = batch["tokens"][:, 1:]
+            lg = logits[:, :-1]
+            lp = jax.nn.log_softmax(lg.astype(jnp.float32), axis=-1)
+            nll = -jnp.take_along_axis(lp, labels[..., None], axis=-1)[..., 0]
+            per_seq = jnp.mean(nll, axis=1)
+            loss = jnp.sum(per_seq * weight) / jnp.maximum(jnp.sum(weight), 1e-6)
+            return loss + 0.01 * aux, {"nll": loss, "kept": jnp.mean(keep.astype(jnp.float32))}
+
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(state.params)
+        params, opt, opt_metrics = adamw_update(state.params, grads, state.opt, opt_cfg)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        metrics["loss"] = loss
+        return TrainState(params, opt), metrics
+
+    return step

@@ -1,0 +1,33 @@
+"""Shared fixtures. NOTE: do NOT set XLA_FLAGS here — smoke tests and benches
+must see the real single-device CPU; only launch/dryrun.py forces 512 devices."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+# Standardized small shapes so jit caches are shared across tests (1-core CPU).
+N_ROWS = 512
+N_FEATURES = 8
+MAX_BIN = 32
+MAX_DEPTH = 3
+
+
+@pytest.fixture(scope="session")
+def small_classification():
+    from repro.data.synthetic import make_classification
+
+    X, y = make_classification(N_ROWS, N_FEATURES, class_sep=1.5, flip_y=0.02, seed=11)
+    return X, y
+
+
+@pytest.fixture(scope="session")
+def small_higgs():
+    from repro.data.synthetic import make_higgs_like
+
+    X, y = make_higgs_like(N_ROWS, seed=5)
+    Xe, ye = make_higgs_like(N_ROWS, seed=5, batch=1000)
+    return X, y, Xe, ye

@@ -1,0 +1,98 @@
+"""ELLPACK pages (Alg. 4/5) + compaction (Alg. 7) + page store round-trips."""
+import numpy as np
+import pytest
+
+from repro.core.ellpack import (
+    MISSING_BIN,
+    EllpackPage,
+    bin_batch,
+    compact,
+    create_ellpack_pages,
+)
+from repro.core.quantile import sketch_dense
+from repro.data.pages import PageStore, Prefetcher, TransferStats
+
+
+def _cuts_and_X(n=300, m=4, seed=0, missing=0.0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, m)).astype(np.float32)
+    if missing:
+        X[rng.random(X.shape) < missing] = np.nan
+    return X, sketch_dense(np.nan_to_num(X, nan=np.nan), max_bin=16)
+
+
+def test_bin_batch_missing_sentinel():
+    X, cuts = _cuts_and_X(missing=0.1)
+    bins = bin_batch(X, cuts)
+    assert np.all((bins == MISSING_BIN) == np.isnan(X))
+
+
+def test_bin_batch_monotone_in_value():
+    X, cuts = _cuts_and_X()
+    order = np.argsort(X[:, 0])
+    bins = bin_batch(X, cuts)[:, 0]
+    assert np.all(np.diff(bins[order].astype(int)) >= 0)
+
+
+def test_paging_preserves_rows():
+    X, cuts = _cuts_and_X(n=500)
+    whole = bin_batch(X, cuts)
+    batches = [X[i : i + 64] for i in range(0, 500, 64)]
+    pages = list(create_ellpack_pages(iter(batches), cuts, page_bytes=512))
+    assert len(pages) > 1
+    stitched = np.concatenate([p.bins for p in pages], axis=0)
+    np.testing.assert_array_equal(stitched, whole)
+    # row offsets are consistent and contiguous
+    offs = [p.row_offset for p in pages]
+    assert offs[0] == 0
+    for i in range(1, len(pages)):
+        assert offs[i] == offs[i - 1] + pages[i - 1].n_rows
+
+
+def test_page_byte_budget():
+    X, cuts = _cuts_and_X(n=500)
+    pages = list(create_ellpack_pages(iter([X]), cuts, page_bytes=512))
+    for p in pages[:-1]:
+        assert p.nbytes <= 512
+
+
+def test_compact_gathers_selected_rows():
+    X, cuts = _cuts_and_X(n=200)
+    whole = bin_batch(X, cuts)
+    pages = list(create_ellpack_pages(iter([X]), cuts, page_bytes=256))
+    sel = np.array([0, 5, 17, 100, 101, 199])
+    page, ids = compact(pages, sel)
+    np.testing.assert_array_equal(ids, sel)
+    np.testing.assert_array_equal(page.bins, whole[sel])
+
+
+def test_page_store_roundtrip(tmp_path):
+    stats = TransferStats()
+    store = PageStore(str(tmp_path / "pages"), compress=True, stats=stats)
+    a = np.arange(100, dtype=np.uint8).reshape(10, 10)
+    idx = store.write_page({"bins": a}, {"row_offset": 0})
+    out = store.read_page(idx)
+    np.testing.assert_array_equal(out["bins"], a)
+    assert stats.disk_write_bytes > 0 and stats.disk_read_bytes > 0
+
+
+def test_prefetcher_order_and_retry(tmp_path):
+    calls = {"fail": 0}
+
+    def load(idx):
+        if idx == 2 and calls["fail"] < 1:
+            calls["fail"] += 1
+            raise IOError("transient")
+        return {"idx": idx}
+
+    got = [i for i, _ in Prefetcher(load, range(5), depth=2)]
+    assert got == list(range(5))
+    assert calls["fail"] == 1  # retried transparently
+
+
+def test_prefetcher_raises_after_retries():
+    def load(idx):
+        raise IOError("permanent")
+
+    with pytest.raises(RuntimeError):
+        list(Prefetcher(load, range(2), depth=1, retries=1))

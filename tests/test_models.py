@@ -1,0 +1,208 @@
+"""LM substrate tests: attention oracles, SSD recurrence, grouped MoE,
+serve-path consistency (prefill/decode == training forward), paged KV."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.moe import dispatch_indices, moe_block, moe_capacity
+from repro.models.serve import decode_step, init_cache, prefill
+from repro.models.ssm import ssd_decode_step, ssd_scan
+from repro.models.transformer import forward, init_params
+
+
+# --------------------------------------------------------------- attention
+def _ref_attn(q, k, v, pos, window=0):
+    B, S, H, D = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    qr = q.reshape(B, S, KH, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr, k) / math.sqrt(D)
+    mask = pos[:, None] >= pos[None, :]
+    if window:
+        mask &= pos[:, None] - pos[None, :] < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p, v).reshape(B, S, H, D)
+
+
+@pytest.mark.parametrize("window,qc,kc", [(0, 16, 32), (0, 7, 13), (16, 128, 128)])
+def test_chunked_attention_matches_dense(window, qc, kc):
+    rng = np.random.default_rng(0)
+    B, S, H, KH, D = 2, 67, 6, 2, 16
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, S, KH, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S, KH, D)).astype(np.float32))
+    pos = jnp.arange(S)
+    got = L.chunked_attention(q, k, v, pos, pos, window=window, q_chunk=qc, kv_chunk=kc)
+    want = _ref_attn(q, k, v, pos, window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-5)
+
+
+def test_chunked_attention_grad_finite():
+    rng = np.random.default_rng(1)
+    B, S, H, KH, D = 1, 32, 2, 1, 8
+    q = jnp.asarray(rng.normal(size=(B, S, H, D)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, S, KH, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S, KH, D)).astype(np.float32))
+    pos = jnp.arange(S)
+    g = jax.grad(
+        lambda q: jnp.sum(L.chunked_attention(q, k, v, pos, pos, q_chunk=8, kv_chunk=8))
+    )(q)
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+# --------------------------------------------------------------- SSD (mamba2)
+def test_ssd_scan_matches_recurrence():
+    rng = np.random.default_rng(0)
+    B, S, d_inner, N, P = 2, 37, 32, 8, 8
+    H = d_inner // P
+    xbc = jnp.asarray(rng.normal(size=(B, S, d_inner + 2 * N)).astype(np.float32))
+    dt = jnp.asarray(np.abs(rng.normal(size=(B, S, H))).astype(np.float32) * 0.1)
+    A = jnp.asarray(-np.abs(rng.normal(size=H)).astype(np.float32))
+
+    x = np.asarray(xbc[..., :d_inner]).reshape(B, S, H, P)
+    Bm = np.asarray(xbc[..., d_inner : d_inner + N])
+    Cm = np.asarray(xbc[..., d_inner + N :])
+    h = np.zeros((B, H, P, N))
+    want = np.zeros((B, S, H, P))
+    for t in range(S):
+        decay = np.exp(np.asarray(dt)[:, t] * np.asarray(A)[None])
+        h = h * decay[..., None, None] + np.einsum(
+            "bn,bh,bhp->bhpn", Bm[:, t], np.asarray(dt)[:, t], x[:, t]
+        )
+        want[:, t] = np.einsum("bn,bhpn->bhp", Cm[:, t], h)
+    for chunk in (8, 16, 64):
+        y, hf = ssd_scan(xbc, dt, A, d_inner, N, P, chunk)
+        np.testing.assert_allclose(np.asarray(y).reshape(B, S, H, P), want, atol=2e-3)
+        np.testing.assert_allclose(np.asarray(hf), h, atol=2e-3)
+
+
+def test_ssd_decode_continues_scan():
+    rng = np.random.default_rng(1)
+    B, S, d_inner, N, P = 2, 19, 32, 8, 8
+    H = d_inner // P
+    xbc = jnp.asarray(rng.normal(size=(B, S + 1, d_inner + 2 * N)).astype(np.float32))
+    dt = jnp.asarray(np.abs(rng.normal(size=(B, S + 1, H))).astype(np.float32) * 0.1)
+    A = jnp.asarray(-np.abs(rng.normal(size=H)).astype(np.float32))
+    _, h0 = ssd_scan(xbc[:, :S], dt[:, :S], A, d_inner, N, P, 8)
+    y1, h1 = ssd_decode_step(xbc[:, S], dt[:, S], A, h0, d_inner, N, P)
+    yf, hf = ssd_scan(xbc, dt, A, d_inner, N, P, 8)
+    np.testing.assert_allclose(np.asarray(yf[:, -1]), np.asarray(y1), atol=1e-3)
+    np.testing.assert_allclose(np.asarray(hf), np.asarray(h1), atol=1e-3)
+
+
+# --------------------------------------------------------------- MoE
+def test_moe_grouped_matches_dense_routing():
+    rng = np.random.default_rng(1)
+    G, N, d, E, ff, k = 3, 32, 16, 8, 32, 2
+    x = jnp.asarray(rng.normal(size=(G, N, d)).astype(np.float32))
+    rw = jnp.asarray(rng.normal(size=(d, E)).astype(np.float32) * 0.1)
+    wg = jnp.asarray(rng.normal(size=(E, d, ff)).astype(np.float32) * 0.1)
+    wu = jnp.asarray(rng.normal(size=(E, d, ff)).astype(np.float32) * 0.1)
+    wd = jnp.asarray(rng.normal(size=(E, ff, d)).astype(np.float32) * 0.1)
+    out, aux = moe_block(x, rw, wg, wu, wd, top_k=k, capacity_factor=8.0)
+    logits = np.einsum("gnd,de->gne", np.asarray(x), np.asarray(rw))
+    topw, topi = jax.lax.top_k(jnp.asarray(logits), k)
+    topw = jax.nn.softmax(topw, -1)
+    want = np.zeros((G, N, d), np.float32)
+    for gi in range(G):
+        for t in range(N):
+            for j in range(k):
+                e = int(topi[gi, t, j])
+                hg = np.asarray(x[gi, t]) @ np.asarray(wg[e])
+                u = np.asarray(x[gi, t]) @ np.asarray(wu[e])
+                y = (hg / (1 + np.exp(-hg)) * u) @ np.asarray(wd[e])
+                want[gi, t] += float(topw[gi, t, j]) * y
+    np.testing.assert_allclose(np.asarray(out), want, atol=1e-4)
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_overflow():
+    ids = jnp.asarray([[[0, 1], [0, 1], [0, 2]]], jnp.int32).reshape(1, 6)
+    slot, keep = dispatch_indices(ids, 4, 1)
+    assert np.asarray(keep).tolist() == [[True, True, False, False, False, True]]
+
+
+def test_moe_capacity_rounding():
+    assert moe_capacity(4096, 64, 6, 1.25) % 8 == 0
+    assert moe_capacity(1, 64, 6, 1.25) == 8  # decode floor
+
+
+# ------------------------------------------------------- serve consistency
+CASES = [
+    ModelConfig(name="dense", family="dense", n_layers=3, d_model=64, vocab_size=128,
+                n_heads=4, n_kv_heads=2, d_ff=128, dtype="float32"),
+    ModelConfig(name="moe", family="moe", n_layers=3, d_model=64, vocab_size=128,
+                n_heads=4, n_kv_heads=4, d_ff=64, n_experts=4, top_k=2,
+                first_k_dense=1, capacity_factor=8.0, dtype="float32"),
+    ModelConfig(name="ssm", family="ssm", n_layers=3, d_model=64, vocab_size=128,
+                ssm_state=16, ssm_head_dim=16, ssm_chunk=8, dtype="float32"),
+    ModelConfig(name="hyb", family="hybrid", n_layers=4, d_model=64, vocab_size=128,
+                n_heads=4, n_kv_heads=2, d_ff=128, ssm_state=16, ssm_head_dim=16,
+                ssm_chunk=8, swa_window=8, n_global_layers=2, dtype="float32"),
+]
+
+
+@pytest.mark.parametrize("cfg", CASES, ids=[c.name for c in CASES])
+def test_prefill_decode_match_forward(cfg):
+    B, S = 2, 24
+    rng = np.random.default_rng(0)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    toks_ext = jnp.concatenate([toks, toks[:, :1]], axis=1)
+    full, _ = forward(params, cfg, {"tokens": toks_ext}, remat=False)
+
+    lg_pre, cache = prefill(params, cfg, toks, max_len=S + 8)
+    np.testing.assert_allclose(
+        np.asarray(lg_pre), np.asarray(full[:, S - 1]), atol=1e-3
+    )
+    lg_dec, cache = decode_step(params, cfg, toks_ext[:, S], cache)
+    np.testing.assert_allclose(np.asarray(lg_dec), np.asarray(full[:, S]), atol=1e-3)
+
+
+def test_paged_equals_contiguous():
+    cfg = CASES[0]
+    B, S, steps = 2, 24, 5
+    rng = np.random.default_rng(0)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    lp, cp = prefill(params, cfg, toks, max_len=S + steps, paged=True)
+    lc, cc = prefill(params, cfg, toks, max_len=S + steps, paged=False)
+    np.testing.assert_allclose(np.asarray(lp), np.asarray(lc), atol=1e-4)
+    tp = tc = jnp.argmax(lp, -1).astype(jnp.int32)
+    for _ in range(steps):
+        lp, cp = decode_step(params, cfg, tp, cp)
+        lc, cc = decode_step(params, cfg, tc, cc)
+        np.testing.assert_allclose(np.asarray(lp), np.asarray(lc), atol=1e-3)
+        tp = jnp.argmax(lp, -1).astype(jnp.int32)
+        tc = jnp.argmax(lc, -1).astype(jnp.int32)
+        assert bool(jnp.all(tp == tc))
+
+
+def test_ring_decode_attention_masks_unfilled():
+    rng = np.random.default_rng(0)
+    B, W, KH, D, H = 1, 8, 1, 4, 2
+    q = jnp.asarray(rng.normal(size=(B, 1, H, D)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, W, KH, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, W, KH, D)).astype(np.float32))
+    out3 = L.ring_decode_attention(q, k, v, 3)
+    # zeroing the unfilled slots must not change the result
+    k2 = k.at[:, 3:].set(99.0)
+    v2 = v.at[:, 3:].set(99.0)
+    out3b = L.ring_decode_attention(q, k2, v2, 3)
+    np.testing.assert_allclose(np.asarray(out3), np.asarray(out3b), atol=1e-6)
+
+
+def test_unrolled_forward_equals_scanned():
+    cfg = CASES[0]
+    rng = np.random.default_rng(3)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jnp.asarray(rng.integers(0, 128, (2, 16)), jnp.int32)}
+    a, _ = forward(params, cfg, batch, remat=False, unroll=False)
+    b, _ = forward(params, cfg, batch, remat=False, unroll=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)

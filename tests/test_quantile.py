@@ -1,0 +1,98 @@
+"""Quantile sketch (Alg. 2/3): exactness, batch-invariance, merge, hypothesis properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ellpack import bin_batch
+from repro.core.quantile import QuantileSketch, sketch_dense
+
+
+def test_exact_when_few_distinct_values():
+    X = np.repeat(np.arange(10.0)[:, None], 3, axis=1)
+    cuts = sketch_dense(X, max_bin=32)
+    for f in range(3):
+        edges = cuts.feature_edges(f)
+        # every distinct value gets its own bin edge (last widened by eps)
+        assert len(edges) == 10
+        np.testing.assert_allclose(edges[:-1], np.arange(9.0), rtol=1e-6)
+
+
+def test_bins_cover_all_values():
+    rng = np.random.default_rng(3)
+    X = rng.normal(size=(1000, 5)).astype(np.float32)
+    cuts = sketch_dense(X, max_bin=16)
+    bins = bin_batch(X, cuts)
+    for f in range(5):
+        assert bins[:, f].max() < cuts.n_bins(f)
+
+
+def test_quantile_accuracy_large():
+    rng = np.random.default_rng(4)
+    x = rng.normal(size=20000)
+    cuts = sketch_dense(x[:, None], max_bin=64)
+    edges = cuts.feature_edges(0)
+    # each bin should hold roughly 1/64 of the mass; allow 3x deviation
+    bins = bin_batch(x[:, None], cuts)[:, 0]
+    counts = np.bincount(bins, minlength=len(edges))
+    assert counts.max() < 3 * len(x) / 64
+
+
+def test_batched_equals_merged():
+    rng = np.random.default_rng(5)
+    X = rng.normal(size=(4000, 3))
+    a = QuantileSketch(3, max_bin=32)
+    for i in range(0, 4000, 500):
+        a.update(X[i : i + 500])
+    b1 = QuantileSketch(3, max_bin=32)
+    b1.update(X[:2000])
+    b2 = QuantileSketch(3, max_bin=32)
+    b2.update(X[2000:])
+    merged = b1.merge(b2)
+    ca, cm = a.finalize(), merged.finalize()
+    for f in range(3):
+        ea, em = ca.feature_edges(f), cm.feature_edges(f)
+        # sketches built differently agree approximately on quantiles
+        qs = np.linspace(0.1, 0.9, 9)
+        qa = np.quantile(X[:, f], qs)
+        for q in qa:
+            ba = np.searchsorted(ea, q)
+            bm = np.searchsorted(em, q)
+            assert abs(ba / len(ea) - bm / len(em)) < 0.15
+
+
+def test_nan_excluded():
+    X = np.array([[1.0], [np.nan], [2.0], [3.0], [np.nan]])
+    cuts = sketch_dense(X, max_bin=8)
+    edges = cuts.feature_edges(0)
+    assert np.all(np.isfinite(edges))
+    assert len(edges) == 3
+
+
+@given(
+    st.lists(st.floats(-1e6, 1e6, allow_nan=False), min_size=2, max_size=300),
+    st.integers(2, 64),
+)
+@settings(max_examples=30, deadline=None)
+def test_property_monotone_and_covering(values, max_bin):
+    x = np.asarray(values, dtype=np.float64)[:, None]
+    cuts = sketch_dense(x, max_bin=max_bin)
+    edges = cuts.feature_edges(0)
+    # edges strictly increasing
+    assert np.all(np.diff(edges) > 0)
+    # bin count bounded by max_bin and by distinct values
+    assert len(edges) <= max_bin
+    # every value maps to a valid bin and max(x) <= last edge
+    bins = bin_batch(x, cuts)[:, 0]
+    assert bins.max() < len(edges)
+    assert x.max() <= edges[-1]
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_property_weighted_total_preserved(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(200, 1))
+    w = rng.random(200) + 0.1
+    s = QuantileSketch(1, max_bin=16, sketch_size=32)
+    s.update(x, w)
+    assert np.isclose(np.sum(s._weights[0]), w.sum(), rtol=1e-9)

@@ -1,0 +1,51 @@
+"""Roofline analysis: HLO collective parsing + model-FLOPs accounting."""
+import numpy as np
+
+from repro.roofline.analysis import HW, collective_bytes_from_hlo, model_flops
+
+HLO = """
+HloModule test
+  %all-reduce = f32[128,500]{1,0} all-reduce(%fusion), channel_id=1, replica_groups=[16,16]<=[256]
+  %all-gather-start = (bf16[4,8]{1,0}, bf16[64,8]{1,0}) all-gather-start(%p), dimensions={0}
+  %all-gather-done = bf16[64,8]{1,0} all-gather-done(%all-gather-start)
+  %ag2 = bf16[1024]{0} all-gather(%x), dimensions={0}
+  %rs = f32[32]{0} reduce-scatter(%y), dimensions={0}
+  %cp = u8[2,3]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+  %a2a = f32[16,16]{1,0} all-to-all(%w), dimensions={0}
+  %not-a-collective = f32[9999999]{0} add(%a, %b)
+"""
+
+
+def test_collective_parse_kinds_and_bytes():
+    out = collective_bytes_from_hlo(HLO)
+    assert out["all-reduce"] == 128 * 500 * 4
+    # -start counted once (result tuple includes in+out buffers), -done skipped
+    assert out["all-gather"] == (4 * 8 + 64 * 8) * 2 + 1024 * 2
+    assert out["reduce-scatter"] == 32 * 4
+    assert out["collective-permute"] == 6
+    assert out["all-to-all"] == 16 * 16 * 4
+    assert "add" not in out
+
+
+def test_no_collectives_empty():
+    assert collective_bytes_from_hlo("%x = f32[3] add(%a, %b)") == {}
+
+
+def test_model_flops_train_vs_serve():
+    assert model_flops(1e9, 1000, "train") == 6e12
+    assert model_flops(1e9, 1000, "serve") == 2e12
+
+
+def test_hw_constants_match_assignment():
+    assert HW.peak_flops == 197e12
+    assert HW.hbm_bw == 819e9
+    assert HW.ici_bw == 50e9
+
+
+def test_useful_ratio_sanity():
+    # a dense model's compiled flops should be within ~4x of 6ND with remat
+    from repro.configs.registry import get_config
+
+    cfg = get_config("smollm-135m")
+    n = cfg.param_count()
+    assert 1.2e8 < n < 1.5e8

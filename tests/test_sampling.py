@@ -1,0 +1,117 @@
+"""Sampling (§2.4): MVS threshold exactness, unbiasedness, GOSS/SGB semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sampling import (
+    SamplingConfig,
+    estimate_mvs_lambda,
+    mvs_threshold,
+    sample,
+)
+
+
+def test_mvs_threshold_solves_expected_size():
+    rng = np.random.default_rng(0)
+    g_hat = jnp.asarray(np.abs(rng.normal(size=1000)).astype(np.float32))
+    for f in (0.1, 0.3, 0.7):
+        mu = mvs_threshold(g_hat, f * 1000)
+        p = jnp.clip(g_hat / mu, 0, 1)
+        assert abs(float(p.sum()) - f * 1000) < 1.0
+
+
+def test_mvs_large_gradients_always_kept():
+    g = np.zeros(100, np.float32)
+    g[:5] = 100.0  # huge gradients
+    g[5:] = 0.01
+    keep, w = sample(
+        jax.random.PRNGKey(0),
+        jnp.asarray(g),
+        jnp.ones(100, jnp.float32) * 1e-6,
+        SamplingConfig(method="mvs", f=0.2, mvs_lambda=0.0),
+    )
+    assert bool(jnp.all(keep[:5]))
+    np.testing.assert_allclose(np.asarray(w[:5]), 1.0, rtol=1e-5)
+
+
+def test_mvs_unbiased_gradient_sum():
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.normal(size=4000).astype(np.float32))
+    h = jnp.asarray(rng.random(4000).astype(np.float32))
+    cfg = SamplingConfig(method="mvs", f=0.3, mvs_lambda=0.5)
+    totals = []
+    for s in range(30):
+        keep, w = sample(jax.random.PRNGKey(s), g, h, cfg)
+        totals.append(float(jnp.sum(jnp.where(keep, g * w, 0.0))))
+    est = np.mean(totals)
+    true = float(jnp.sum(g))
+    spread = np.std(totals) / np.sqrt(len(totals)) * 4 + 1e-3
+    assert abs(est - true) < spread + 0.05 * abs(true) + 1.0
+
+
+def test_goss_top_fraction_kept_and_weighted():
+    rng = np.random.default_rng(2)
+    g = jnp.asarray(rng.normal(size=1000).astype(np.float32))
+    h = jnp.ones(1000, jnp.float32)
+    cfg = SamplingConfig(method="goss", goss_a=0.2, goss_b=0.1)
+    keep, w = sample(jax.random.PRNGKey(0), g, h, cfg)
+    mag = np.abs(np.asarray(g))
+    top_idx = np.argsort(-mag)[:200]
+    assert bool(np.all(np.asarray(keep)[top_idx]))
+    np.testing.assert_allclose(np.asarray(w)[top_idx], 1.0)
+    rest_kept = np.asarray(keep) & ~np.isin(np.arange(1000), top_idx)
+    if rest_kept.any():
+        np.testing.assert_allclose(np.asarray(w)[rest_kept], (1 - 0.2) / 0.1, rtol=1e-5)
+
+
+def test_uniform_rate():
+    g = jnp.zeros(20000, jnp.float32)
+    keep, w = sample(
+        jax.random.PRNGKey(0), g, g, SamplingConfig(method="uniform", f=0.25)
+    )
+    rate = float(jnp.mean(keep.astype(jnp.float32)))
+    assert abs(rate - 0.25) < 0.02
+    assert float(jnp.max(w)) == 1.0
+
+
+def test_none_keeps_everything():
+    g = jnp.ones(10, jnp.float32)
+    keep, w = sample(jax.random.PRNGKey(0), g, g, SamplingConfig(method="none"))
+    assert bool(jnp.all(keep)) and bool(jnp.all(w == 1.0))
+
+
+def test_estimate_mvs_lambda_matches_paper():
+    g = jnp.asarray([1.0, 2.0, 3.0])
+    h = jnp.asarray([1.0, 1.0, 1.0])
+    lam = float(estimate_mvs_lambda(g, h))
+    assert np.isclose(lam, 4.0)  # (6/3)^2
+
+
+@given(
+    st.integers(10, 500),
+    st.floats(0.05, 1.0),
+    st.integers(0, 2**31 - 1),
+)
+@settings(max_examples=20, deadline=None)
+def test_property_mvs_expected_size(n, f, seed):
+    rng = np.random.default_rng(seed)
+    g_hat = jnp.asarray(np.abs(rng.normal(size=n)).astype(np.float32) + 1e-3)
+    mu = mvs_threshold(g_hat, f * n)
+    p = jnp.clip(g_hat / mu, 0, 1)
+    assert float(p.sum()) <= n + 1e-3
+    assert abs(float(p.sum()) - min(f * n, n)) < max(1.0, 0.02 * n)
+
+
+@given(st.sampled_from(["uniform", "goss", "mvs"]), st.integers(0, 1000))
+@settings(max_examples=15, deadline=None)
+def test_property_weights_positive_and_mask_bool(method, seed):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=64).astype(np.float32))
+    h = jnp.asarray(rng.random(64).astype(np.float32))
+    cfg = SamplingConfig(method=method, f=0.5)
+    keep, w = sample(jax.random.PRNGKey(seed), g, h, cfg)
+    assert keep.dtype == jnp.bool_
+    assert bool(jnp.all(w[keep] > 0))
+    assert bool(jnp.all(jnp.isfinite(w[keep])))

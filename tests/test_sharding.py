@@ -1,0 +1,85 @@
+"""Sharding rules on the production mesh geometry (AbstractMesh: no devices)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs.registry import LM_ARCHS, get_config
+from repro.models.serve import init_cache
+from repro.models.transformer import init_params
+from repro.sharding.rules import MeshAxes, param_specs, serve_cache_specs
+
+MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH_POD = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+AXES = MeshAxes(data=("data",), model="model")
+AXES_POD = MeshAxes(data=("pod", "data"), model="model")
+
+
+def _check_divisible(specs, struct, mesh):
+    sizes = dict(mesh.shape)
+    ok = []
+
+    def chk(spec, leaf):
+        for dim, names in zip(leaf.shape, spec):
+            if names is None:
+                continue
+            n = 1
+            for name in (names if isinstance(names, tuple) else (names,)):
+                n *= sizes[name]
+            assert dim % n == 0, (spec, leaf.shape)
+        ok.append(1)
+
+    jax.tree_util.tree_map(chk, specs, struct)
+    assert ok
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+@pytest.mark.parametrize("mesh,axes", [(MESH, AXES), (MESH_POD, AXES_POD)],
+                         ids=["16x16", "2x16x16"])
+def test_param_specs_divisible(arch, mesh, axes):
+    cfg = get_config(arch)
+    struct = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+    specs = param_specs(struct, mesh, axes)
+    _check_divisible(specs, struct, mesh)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "moonshot-v1-16b-a3b", "mamba2-130m", "hymba-1.5b"])
+def test_cache_specs_divisible(arch):
+    cfg = get_config(arch)
+    B = 128
+    struct = jax.eval_shape(lambda: init_cache(cfg, B, 4096,
+                                               paged=cfg.family in ("dense", "moe")))
+    specs = serve_cache_specs(struct, MESH, AXES, B)
+    _check_divisible(specs, struct, MESH)
+
+
+def test_attention_params_fall_back_to_head_dim():
+    """llava: 56 heads don't divide 16 -> head_dim (128) carries the TP axis."""
+    cfg = get_config("llava-next-34b")
+    struct = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+    specs = param_specs(struct, MESH, AXES)
+    wq = specs["blocks"]["wq"]  # (L, d, H, hd)
+    assert wq == P(None, ("data",), None, "model")
+
+
+def test_divisible_heads_sharded_directly():
+    cfg = get_config("phi3-mini-3.8b")  # 32 heads % 16 == 0
+    struct = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+    specs = param_specs(struct, MESH, AXES)
+    assert specs["blocks"]["wq"] == P(None, ("data",), "model", None)
+
+
+def test_odd_vocab_not_model_sharded():
+    cfg = get_config("minicpm-2b")  # vocab 122753 is odd
+    struct = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+    specs = param_specs(struct, MESH, AXES)
+    assert specs["embed"][0] is None  # V unsharded
+    assert specs["embed"][1] in (("data",), "data")  # FSDP on d
+
+
+def test_moe_experts_on_model_axis():
+    cfg = get_config("olmoe-1b-7b")
+    struct = jax.eval_shape(lambda k: init_params(k, cfg), jax.random.PRNGKey(0))
+    specs = param_specs(struct, MESH, AXES)
+    assert specs["blocks"]["w_gate"][1] == "model"  # (L, E, d, ff): E sharded

@@ -1,0 +1,104 @@
+"""Training substrate: optimizer schedules, train/MVS steps, checkpoints."""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.config import ModelConfig
+from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+from repro.train.optimizer import OptConfig, lr_at
+from repro.train.train_step import (
+    TrainConfig,
+    init_state,
+    make_mvs_train_step,
+    make_train_step,
+    mvs_sequence_mask,
+)
+
+CFG = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64, vocab_size=128,
+                  n_heads=4, n_kv_heads=2, d_ff=128, dtype="float32")
+OC = OptConfig(peak_lr=1e-2, warmup_steps=2, total_steps=40, schedule="wsd")
+
+
+@pytest.fixture(scope="module")
+def batch():
+    rng = np.random.default_rng(0)
+    return {"tokens": jnp.asarray(rng.integers(0, 128, (8, 32)), jnp.int32)}
+
+
+def test_train_step_reduces_loss(batch):
+    state = init_state(jax.random.PRNGKey(0), CFG, OC)
+    step = jax.jit(make_train_step(CFG, OC))
+    losses = []
+    for _ in range(8):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    assert all(np.isfinite(losses))
+
+
+def test_wsd_schedule_shape():
+    lrs = [float(lr_at(OC, jnp.asarray(s))) for s in (0, 1, 2, 10, 35, 38, 40)]
+    assert lrs[0] == 0.0
+    assert lrs[2] == max(lrs)  # peak right after warmup
+    assert lrs[3] == lrs[4] == lrs[2]  # stable phase
+    assert lrs[-1] < lrs[4]  # final decay
+
+
+def test_cosine_schedule_monotone_decay():
+    oc = OptConfig(peak_lr=1.0, warmup_steps=0, total_steps=100, schedule="cosine",
+                   min_lr_ratio=0.1)
+    vals = [float(lr_at(oc, jnp.asarray(s))) for s in (1, 25, 50, 75, 100)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
+    assert abs(vals[-1] - 0.1) < 1e-3
+
+
+def test_mvs_step_keeps_roughly_f(batch):
+    state = init_state(jax.random.PRNGKey(0), CFG, OC)
+    step = jax.jit(make_mvs_train_step(CFG, OC, TrainConfig(mvs_f=0.5)))
+    kept = []
+    for i in range(5):
+        state, m = step(state, batch, jax.random.PRNGKey(i))
+        kept.append(float(m["kept"]))
+    assert 0.2 < float(np.mean(kept)) <= 1.0
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_mvs_mask_prefers_high_loss_sequences():
+    seq_loss = jnp.asarray([10.0, 10.0, 0.01, 0.01], jnp.float32)
+    keeps = []
+    for s in range(50):
+        keep, w = mvs_sequence_mask(jax.random.PRNGKey(s), seq_loss, f=0.5, lam=1.0)
+        keeps.append(np.asarray(keep))
+    rate = np.mean(keeps, axis=0)
+    assert rate[0] > rate[2] and rate[1] > rate[3]
+    assert rate[0] > 0.95  # high-ĝ rows are protected (p == 1)
+
+
+def test_checkpoint_roundtrip_bf16():
+    cfg = ModelConfig(name="t", family="dense", n_layers=2, d_model=64, vocab_size=128,
+                      n_heads=4, n_kv_heads=2, d_ff=128, dtype="bfloat16")
+    st = init_state(jax.random.PRNGKey(1), cfg, OC)
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, st, step=7, extra={"arch": "t"})
+        restored, step = restore_checkpoint(d, jax.eval_shape(lambda: st))
+        assert step == 7
+        for a, b in zip(jax.tree_util.tree_leaves(st), jax.tree_util.tree_leaves(restored)):
+            assert a.dtype == b.dtype
+            assert bool(jnp.all(a == b))
+
+
+def test_checkpoint_shape_mismatch_raises():
+    st = init_state(jax.random.PRNGKey(1), CFG, OC)
+    other = init_state(
+        jax.random.PRNGKey(1),
+        ModelConfig(name="o", family="dense", n_layers=2, d_model=32, vocab_size=128,
+                    n_heads=4, n_kv_heads=2, d_ff=64, dtype="float32"),
+        OC,
+    )
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, st, step=1)
+        with pytest.raises(ValueError, match="shape mismatch"):
+            restore_checkpoint(d, jax.eval_shape(lambda: other))
