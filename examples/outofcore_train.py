@@ -66,6 +66,8 @@ def main():
     print(f"pages on disk:      {resumed.pages.n_pages}")
     print(f"disk written:       {stats.disk_write_bytes/2**20:.1f} MiB")
     print(f"host->device moved: {stats.host_to_device_bytes/2**20:.1f} MiB")
+    print(f"stream overlap:     {stats.overlap_ratio:.2f} "
+          f"({stats.overlap_saved_seconds:.1f}s of transfer+compute hidden)")
     print(f"eval AUC:           {auc(ye, resumed.predict(Xe)):.4f}")
 
 

@@ -14,6 +14,10 @@
                   the paper's measured baseline)
   margin update   stream pages once, gather leaf values per page
 
+All page movement goes through `repro.pipeline.PageStream` (threaded disk
+prefetch + double-buffered host->device staging + optional device-page LRU),
+which also keeps the overlap ledger in `TransferStats`.
+
 Fault tolerance: pages load through a retrying prefetcher; `save`/`resume`
 checkpoints the forest + RNG and rebuilds the margin cache by streaming, so a
 killed run restarts mid-boosting with identical results.
@@ -34,7 +38,6 @@ from repro.core.ellpack import (
     EllpackPage,
     bin_batch,
     create_ellpack_pages,
-    rows_per_page,
 )
 from repro.core.quantile import QuantileSketch
 from repro.core.sampling import sample
@@ -44,10 +47,22 @@ from repro.core.tree import (
     grow_tree_generic,
     predict_tree_bins,
 )
-from repro.data.pages import GLOBAL_STATS, PageStore, Prefetcher, TransferStats
+from repro.data.pages import GLOBAL_STATS, PageStore, TransferStats
 from repro.kernels import ops
+from repro.pipeline import DevicePageCache, PageStream
 
 Array = jax.Array
+
+
+def _bins_to_host_array(page: EllpackPage) -> np.ndarray:
+    # transfer the uint8 ELLPACK page as-is; the int32 upcast the histogram
+    # kernels want happens device-side (4x less PCIe traffic than upcasting
+    # on the host).
+    return np.ascontiguousarray(page.bins)
+
+
+def _put_bins(arr: np.ndarray) -> Array:
+    return jax.device_put(arr).astype(jnp.int32)
 
 
 @dataclasses.dataclass
@@ -65,24 +80,98 @@ class PageSet:
     def n_pages(self) -> int:
         return len(self.row_offsets)
 
-    def iter_pages(self, prefetch_depth: int = 2) -> Iterator[tuple[int, EllpackPage]]:
-        """Stream pages in order; disk-backed pages go through the prefetcher."""
+    @property
+    def page_extents(self) -> list[tuple[int, int]]:
+        """(row_offset, n_rows) per page, derivable without touching the disk."""
+        ends = list(self.row_offsets[1:]) + [self.n_rows]
+        return [(ro, end - ro) for ro, end in zip(self.row_offsets, ends)]
+
+    def stream(
+        self,
+        prefetch_depth: int = 2,
+        staging_depth: int = 2,
+        cache: DevicePageCache | None = None,
+        put=None,
+    ) -> PageStream:
+        """One pass of the unified pipeline engine over this page set."""
+        common = dict(
+            to_array=_bins_to_host_array,
+            put=put or _put_bins,
+            stats=self.stats,
+            prefetch_depth=prefetch_depth,
+            staging_depth=staging_depth,
+            cache=cache,
+        )
         if self.host_pages is not None:
-            for i, p in enumerate(self.host_pages):
-                yield i, p
-            return
+            return PageStream.from_host_pages(self.host_pages, **common)
 
-        def load(idx: int) -> EllpackPage:
-            data = self.store.read_page(idx)
-            return EllpackPage(bins=data["bins"], row_offset=self.row_offsets[idx])
+        def wrap(idx: int, arrays: dict) -> EllpackPage:
+            return EllpackPage(bins=arrays["bins"], row_offset=self.row_offsets[idx])
 
-        for idx, page in Prefetcher(load, range(self.n_pages), depth=prefetch_depth):
-            yield idx, page
+        return PageStream.from_store(self.store, wrap, **common)
+
+    def iter_pages(self, prefetch_depth: int = 2) -> Iterator[tuple[int, EllpackPage]]:
+        """Host-side pass (no device staging); disk pages go through the prefetcher."""
+        yield from self.stream(prefetch_depth=prefetch_depth).iter_host()
 
     def stage(self, page: EllpackPage) -> Array:
         """Host -> device copy of one page ("CopyToGPU"); counted for the paging model."""
         self.stats.host_to_device_bytes += page.nbytes
-        return jnp.asarray(page.bins.astype(np.int32))
+        t0 = time.perf_counter()
+        out = _put_bins(_bins_to_host_array(page))
+        dt = time.perf_counter() - t0
+        # a lone synchronous put overlaps nothing: book equal stage and wall
+        # time so it cannot inflate overlap_ratio
+        self.stats.stream_stage_seconds += dt
+        self.stats.stream_wall_seconds += dt
+        return out
+
+
+def build_tree_paged(
+    make_stream,
+    page_extents: list[tuple[int, int]],
+    g,
+    h,
+    n_bins: int,
+    bin_valid: Array,
+    tp,
+    cut_values=None,
+    cut_ptrs=None,
+    impl: str = "auto",
+) -> tuple[object, dict[int, Array]]:
+    """Level-wise tree build over streamed pages (Alg. 6 core).
+
+    ``make_stream()`` starts one `PageStream` pass; one runs per level for the
+    histogram and one for the partition. Shared by the single-device
+    `ExternalGradientBooster` streaming path and the sharded
+    `distributed.grow_tree_distributed_paged` (which differ only in how the
+    stream stages pages). Returns (tree, per-page positions keyed by stream
+    index, in `page_extents` order).
+    """
+    g_j, h_j = jnp.asarray(g), jnp.asarray(h)
+    positions: dict[int, Array] = {
+        i: jnp.zeros(nr, jnp.int32) for i, (_, nr) in enumerate(page_extents)
+    }
+
+    def hist_fn(offset: int, count: int) -> Array:
+        # one double-buffered pass per level; page k+1 stages while page k's
+        # histogram kernel runs
+        return ops.build_histogram_paged(
+            make_stream(), g_j, h_j, positions, offset, count, n_bins, impl=impl
+        )
+
+    def partition_fn(feature, split_bin, default_left, is_leaf) -> None:
+        for sp in make_stream():
+            positions[sp.index] = ops.partition_rows(
+                sp.device, positions[sp.index], feature, split_bin,
+                default_left, is_leaf, impl=impl,
+            )
+
+    tree = grow_tree_generic(
+        hist_fn, partition_fn, jnp.sum(g_j), jnp.sum(h_j), n_bins, bin_valid,
+        tp, cut_values, cut_ptrs,
+    )
+    return tree, positions
 
 
 class ExternalGradientBooster(GradientBooster):
@@ -94,23 +183,39 @@ class ExternalGradientBooster(GradientBooster):
         cache_dir: str | None = None,
         page_bytes: int = DEFAULT_PAGE_BYTES,
         prefetch_depth: int = 2,
+        staging_depth: int = 2,
         compress_pages: bool = False,
         stats: TransferStats | None = None,
         checkpoint_every: int | None = None,
         checkpoint_dir: str | None = None,
+        device_cache_pages: int | None = None,
         **kwargs,
     ):
         super().__init__(params, **kwargs)
         self.cache_dir = cache_dir
         self.page_bytes = page_bytes
         self.prefetch_depth = prefetch_depth
+        self.staging_depth = staging_depth
         self.compress_pages = compress_pages
         self.stats = stats or GLOBAL_STATS
         self.checkpoint_every = checkpoint_every
         self.checkpoint_dir = checkpoint_dir
+        # None = auto: on the f<1 fast path, cache the page set on-device when
+        # it is small enough (pages are revisited once per iteration for the
+        # margin update); off for the f=1 streaming baseline so its measured
+        # re-stream traffic matches the paper's.
+        self.device_cache_pages = device_cache_pages
+        self._device_cache: DevicePageCache | None = None
         self.pages: PageSet | None = None
         self.labels_: np.ndarray | None = None
         self.margins_: np.ndarray | None = None
+
+    def _stream(self, staging_depth: int | None = None) -> PageStream:
+        return self.pages.stream(
+            prefetch_depth=self.prefetch_depth,
+            staging_depth=staging_depth or self.staging_depth,
+            cache=self._device_cache,
+        )
 
     # ------------------------------------------------------------ preprocess
     def preprocess(self, source) -> PageSet:
@@ -185,6 +290,15 @@ class ExternalGradientBooster(GradientBooster):
         use_sampling = p.sampling.method != "none" and (
             p.sampling.method == "goss" or p.sampling.f < 1.0
         )
+        cache_pages = self.device_cache_pages
+        if cache_pages is None:
+            # auto: cache only when the whole page set fits (a sequential LRU
+            # scan over more pages than capacity evicts every page right
+            # before its reuse — zero hits), and only on the f<1 fast path
+            # where pages are revisited once per iteration.
+            fits = pages.n_pages <= 8
+            cache_pages = pages.n_pages if (use_sampling and fits) else 0
+        self._device_cache = DevicePageCache(cache_pages) if cache_pages > 0 else None
         t0 = time.perf_counter()
         for it in range(start_iteration, p.n_estimators):
             g, h = self.objective.grad_hess(jnp.asarray(self.margins_), labels_j)
@@ -234,8 +348,9 @@ class ExternalGradientBooster(GradientBooster):
         hw = np.asarray(h * w)
 
         # Compact: gather sampled rows from every page into one device page
+        # (host-side pass: the prefetcher overlaps disk reads, nothing staged)
         chunks: list[np.ndarray] = []
-        for _, page in self.pages.iter_pages(self.prefetch_depth):
+        for _, page in self._stream().iter_host():
             lo = np.searchsorted(sel, page.row_offset, side="left")
             hi = np.searchsorted(sel, page.row_offset + page.n_rows, side="left")
             if hi > lo:
@@ -265,47 +380,16 @@ class ExternalGradientBooster(GradientBooster):
 
     # ----------------------------------------------- Alg. 6 (streaming path)
     def _build_tree_streaming(self, g, h, n_bins, bin_valid, tp) -> TreeBuildResult:
-        p = self.params
         pages = self.pages
-        g_j, h_j = jnp.asarray(g), jnp.asarray(h)
-        positions: dict[int, Array] = {}
-        offsets = {}
-        for idx, page in pages.iter_pages(self.prefetch_depth):
-            positions[idx] = jnp.zeros(page.n_rows, jnp.int32)
-            offsets[idx] = (page.row_offset, page.n_rows)
-
-        def hist_fn(offset: int, count: int) -> Array:
-            hist = None
-            for idx, page in pages.iter_pages(self.prefetch_depth):
-                bins_dev = pages.stage(page)
-                ro, nr = offsets[idx]
-                pos = positions[idx]
-                level_pos = jnp.where(pos >= offset, pos - offset, -1)
-                hp = ops.build_histogram(
-                    bins_dev,
-                    jax.lax.dynamic_slice(g_j, (ro,), (nr,)),
-                    jax.lax.dynamic_slice(h_j, (ro,), (nr,)),
-                    level_pos, count, n_bins, impl=p.kernel_impl,
-                )
-                hist = hp if hist is None else hist + hp
-            return hist
-
-        def partition_fn(feature, split_bin, default_left, is_leaf) -> None:
-            for idx, page in pages.iter_pages(self.prefetch_depth):
-                bins_dev = pages.stage(page)
-                positions[idx] = ops.partition_rows(
-                    bins_dev, positions[idx], feature, split_bin, default_left,
-                    is_leaf, impl=p.kernel_impl,
-                )
-
-        tree = grow_tree_generic(
-            hist_fn, partition_fn, jnp.sum(g_j), jnp.sum(h_j), n_bins, bin_valid,
-            tp, self.cuts.values, self.cuts.ptrs,
+        extents = pages.page_extents
+        tree, positions = build_tree_paged(
+            self._stream, extents, g, h, n_bins, bin_valid, tp,
+            self.cuts.values, self.cuts.ptrs, impl=self.params.kernel_impl,
         )
         # final positions point at leaves: margin update without re-streaming
         pos_full = np.empty(pages.n_rows, np.int32)
-        for idx, (ro, nr) in offsets.items():
-            pos_full[ro : ro + nr] = np.asarray(positions[idx])
+        for i, (ro, nr) in enumerate(extents):
+            pos_full[ro : ro + nr] = np.asarray(positions[i])
         return TreeBuildResult(tree=tree, positions=jnp.asarray(pos_full))
 
     # -------------------------------------------------------- margin update
@@ -315,10 +399,9 @@ class ExternalGradientBooster(GradientBooster):
             leaf = np.asarray(res.tree.leaf_value)
             self.margins_ += lr * leaf[np.asarray(res.positions)]
             return
-        for _, page in self.pages.iter_pages(self.prefetch_depth):
-            bins_dev = self.pages.stage(page)
-            pred = predict_tree_bins(res.tree, bins_dev, tp.max_depth)
-            sl = slice(page.row_offset, page.row_offset + page.n_rows)
+        for sp in self._stream():
+            pred = predict_tree_bins(res.tree, sp.device, tp.max_depth)
+            sl = slice(sp.host.row_offset, sp.host.row_offset + sp.host.n_rows)
             self.margins_[sl] += lr * np.asarray(pred)
 
     # -------------------------------------------------------------- restart
@@ -340,9 +423,8 @@ class ExternalGradientBooster(GradientBooster):
         self.margins_ = np.full(self.pages.n_rows, self.base_margin_, np.float32)
         md = self.params.max_depth
         for tree in self.trees:
-            for _, page in self.pages.iter_pages(self.prefetch_depth):
-                bins_dev = self.pages.stage(page)
-                pred = predict_tree_bins(tree, bins_dev, md)
-                sl = slice(page.row_offset, page.row_offset + page.n_rows)
+            for sp in self._stream():
+                pred = predict_tree_bins(tree, sp.device, md)
+                sl = slice(sp.host.row_offset, sp.host.row_offset + sp.host.n_rows)
                 self.margins_[sl] += self.params.learning_rate * np.asarray(pred)
         return self

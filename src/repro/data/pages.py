@@ -34,6 +34,32 @@ class TransferStats:
     device_to_host_bytes: int = 0
     page_loads: int = 0
     load_seconds: float = 0.0
+    # --- streaming-overlap accounting (filled by repro.pipeline.PageStream) ---
+    # fetch/stage/compute are attributed where the work happens (fetch in the
+    # prefetcher thread, stage + compute in the consumer thread), so their sum
+    # is the *serial* cost of a pass; wall is what actually elapsed. Overlap
+    # hides serial work, so wall < serial when the pipeline is doing its job.
+    stream_fetch_seconds: float = 0.0  # source fetch (disk/host) time
+    stream_stage_seconds: float = 0.0  # host->device put time
+    stream_compute_seconds: float = 0.0  # consumer time between pages
+    stream_wall_seconds: float = 0.0  # end-to-end elapsed across passes
+    cache_hits: int = 0  # device-page cache hits (transfers skipped)
+    cache_hit_bytes: int = 0  # host->device bytes those hits saved
+
+    @property
+    def stream_serial_seconds(self) -> float:
+        """What the streamed passes would cost with zero overlap."""
+        return self.stream_fetch_seconds + self.stream_stage_seconds + self.stream_compute_seconds
+
+    @property
+    def overlap_saved_seconds(self) -> float:
+        return max(0.0, self.stream_serial_seconds - self.stream_wall_seconds)
+
+    @property
+    def overlap_ratio(self) -> float:
+        """Fraction of serial transfer+compute time hidden by pipelining (0..1)."""
+        serial = self.stream_serial_seconds
+        return self.overlap_saved_seconds / serial if serial > 0 else 0.0
 
     def reset(self) -> None:
         self.disk_read_bytes = 0
@@ -42,6 +68,12 @@ class TransferStats:
         self.device_to_host_bytes = 0
         self.page_loads = 0
         self.load_seconds = 0.0
+        self.stream_fetch_seconds = 0.0
+        self.stream_stage_seconds = 0.0
+        self.stream_compute_seconds = 0.0
+        self.stream_wall_seconds = 0.0
+        self.cache_hits = 0
+        self.cache_hit_bytes = 0
 
 
 GLOBAL_STATS = TransferStats()

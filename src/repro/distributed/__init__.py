@@ -2,12 +2,16 @@ from repro.distributed.gbdt_shard import (
     DistConfig,
     distributed_train_step,
     grow_tree_distributed,
+    grow_tree_distributed_paged,
     make_gbdt_step_fn,
+    sharded_page_put,
 )
 
 __all__ = [
     "DistConfig",
     "distributed_train_step",
     "grow_tree_distributed",
+    "grow_tree_distributed_paged",
     "make_gbdt_step_fn",
+    "sharded_page_put",
 ]

@@ -17,23 +17,38 @@ Distributed-optimization tricks:
 
 Everything here is shard_map-first: `make_gbdt_step_fn` returns a jit-able
 function over a Mesh, used both for real execution and the multi-pod dry-run.
+
+Out-of-core + distributed (`grow_tree_distributed_paged`): ELLPACK pages
+stream through `repro.pipeline.PageStream` with a *sharded* device put, so
+each staged page lands row-sharded over the data axes and the per-page
+histogram reduces across the mesh under jit — the paper's §2.2 AllReduce
+composed with its §2.3 paging.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Sequence
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.split import SplitParams, evaluate_splits, leaf_weight
+from repro.core.split import evaluate_splits, leaf_weight
 from repro.core.tree import TreeArrays, TreeParams
 from repro.kernels import ops, ref
 
 Array = jax.Array
+
+# jax >= 0.6 exposes shard_map at top level (check_vma); older releases ship
+# it under jax.experimental with the check_rep spelling.
+if hasattr(jax, "shard_map"):
+    _shard_map = functools.partial(jax.shard_map, check_vma=False)
+else:  # pragma: no cover - exercised on older jax only
+    from jax.experimental.shard_map import shard_map as _experimental_shard_map
+
+    _shard_map = functools.partial(_experimental_shard_map, check_rep=False)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -260,12 +275,11 @@ def make_gbdt_step_fn(
         return new_margin, tree
 
     bv_spec = P(cfg.feature_axis) if cfg.feature_axis else rep
-    shard_fn = jax.shard_map(
+    shard_fn = _shard_map(
         local_step,
         mesh=mesh,
         in_specs=(row_spec, vec_spec, vec_spec, bv_spec, rep, rep, rep),
         out_specs=(vec_spec, rep),
-        check_vma=False,
     )
     return jax.jit(shard_fn)
 
@@ -293,14 +307,61 @@ def grow_tree_distributed(
         return _grow_tree_local(bins, g, h, n_bins, bin_valid, tp, cfg, cut_values, cut_ptrs)
 
     bv_spec = P(cfg.feature_axis) if cfg.feature_axis else rep
-    fn = jax.shard_map(
+    fn = _shard_map(
         body,
         mesh=mesh,
         in_specs=(row_spec, vec_spec, vec_spec, bv_spec, rep, rep),
         out_specs=(rep, vec_spec),
-        check_vma=False,
     )
     return jax.jit(fn)(bins, g, h, bin_valid, cut_values, cut_ptrs)
+
+
+def sharded_page_put(mesh: Mesh, cfg: DistConfig) -> Callable[[np.ndarray], Array]:
+    """Device-put for `repro.pipeline.PageStream`: stage a page row-sharded
+    over the data axes (uint8 over the wire, int32 on device)."""
+    sharding = NamedSharding(mesh, P(cfg.data_axes))
+
+    def put(arr: np.ndarray) -> Array:
+        out = jax.device_put(arr, sharding)
+        return out if arr.dtype == np.int32 else out.astype(jnp.int32)
+
+    return put
+
+
+def grow_tree_distributed_paged(
+    mesh: Mesh,
+    make_stream: Callable[[], "object"],
+    page_extents: Sequence[tuple[int, int]],
+    g: Array,
+    h: Array,
+    n_bins: int,
+    bin_valid: Array,
+    tp: TreeParams,
+    cfg: DistConfig,
+    cut_values=None,
+    cut_ptrs=None,
+) -> tuple[TreeArrays, Array]:
+    """Out-of-core distributed build: one tree over pages that never all sit
+    in device memory, rows of each staged page sharded over `cfg.data_axes`.
+
+    ``make_stream()`` starts one `repro.pipeline.PageStream` pass (build it
+    with ``put=sharded_page_put(mesh, cfg)`` so staging lands sharded; the
+    double-buffered puts then overlap the sharded histogram kernels).
+    ``page_extents`` is (row_offset, n_rows) per page in stream order — e.g.
+    ``PageSet.page_extents``. Gradient vectors stay replicated; each per-page
+    histogram reduces across the mesh under jit (the §2.2 AllReduce), so the
+    level-wise split search is identical to the single-device one — it IS the
+    single-device one: `core.outofcore.build_tree_paged`, with mesh placement
+    supplied entirely by the stream's put.
+    """
+    from repro.core.outofcore import build_tree_paged
+
+    tree, positions = build_tree_paged(
+        make_stream, list(page_extents), g, h, n_bins, bin_valid, tp,
+        cut_values, cut_ptrs, impl=cfg.kernel_impl,
+    )
+    pos_full = jnp.concatenate([positions[i] for i in range(len(page_extents))])
+    return tree, pos_full
 
 
 def distributed_train_step(*args, **kwargs):

@@ -8,10 +8,11 @@ Every op takes ``impl`` in {"auto", "pallas", "ref"}:
 """
 from __future__ import annotations
 
-import functools
 import os
+from typing import Iterable, Mapping
 
 import jax
+import jax.numpy as jnp
 
 from repro.kernels import ellpack_bin as _ellpack_bin
 from repro.kernels import histogram as _histogram
@@ -51,6 +52,42 @@ def build_histogram(bins, g, h, positions, n_nodes: int, n_bins: int, impl: str 
             bins, g, h, positions, n_nodes, n_bins, interpret=not _on_tpu()
         )
     return _ref_build_histogram(bins, g, h, positions, n_nodes=n_nodes, n_bins=n_bins)
+
+
+def build_histogram_paged(
+    stream: Iterable,
+    g,
+    h,
+    positions: Mapping[int, jax.Array],
+    offset: int,
+    count: int,
+    n_bins: int,
+    impl: str = "auto",
+):
+    """Page-batched histogram: sum per-page level histograms over one stream pass.
+
+    ``stream`` yields `repro.pipeline.StreamedPage`s whose host view exposes
+    ``row_offset`` / ``n_rows`` and whose device buffer is the staged bins
+    matrix (possibly sharded — the per-page histogram then reduces across the
+    mesh under jit). ``positions[page.index]`` holds that page's global tree
+    positions; rows not at this level contribute to no node (-1).
+    """
+    hist = None
+    for page in stream:
+        ro, nr = page.host.row_offset, page.host.n_rows
+        pos = positions[page.index]
+        level_pos = jnp.where(pos >= offset, pos - offset, -1)
+        hp = build_histogram(
+            page.device,
+            jax.lax.dynamic_slice(g, (ro,), (nr,)),
+            jax.lax.dynamic_slice(h, (ro,), (nr,)),
+            level_pos,
+            count,
+            n_bins,
+            impl=impl,
+        )
+        hist = hp if hist is None else hist + hp
+    return hist
 
 
 def bin_values(x, padded_edges, n_bins_per_feature, impl: str = "auto"):

@@ -1,0 +1,22 @@
+"""repro.pipeline — unified async page-streaming subsystem.
+
+The paper's out-of-core thesis (§2.3/§3) is that training on data larger than
+device memory need not slow down, because disk->host->device page movement can
+hide under device compute. This package is the single implementation of that
+overlap, shared by every streaming consumer in the repo:
+
+  `PageStream`       double-buffered disk -> host -> device engine (threaded
+                     prefetch + async staged device puts + per-pass overlap
+                     accounting into `TransferStats`);
+  `DevicePageCache`  LRU of device-resident pages so repeated passes skip
+                     transfers (the f < 1 compacted-page fast path);
+  `StreamedPage`     what a pass yields: (index, host page, device buffer).
+
+See `repro/pipeline/stream.py` for the pipeline stages and the overlap ledger,
+and `TransferStats.overlap_ratio` for the reported metric (fraction of serial
+transfer+compute time hidden by pipelining).
+"""
+from repro.pipeline.cache import DevicePageCache
+from repro.pipeline.stream import PageStream, StreamedPage
+
+__all__ = ["DevicePageCache", "PageStream", "StreamedPage"]

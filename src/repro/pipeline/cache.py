@@ -1,0 +1,72 @@
+"""LRU cache of device-resident pages.
+
+Out-of-core passes revisit the same immutable pages — Alg. 6 re-streams every
+page per tree level, and the Alg. 7 fast path re-streams them once per
+iteration for the margin update. When a page's device copy is still resident
+from the previous pass, the host->device transfer can be skipped entirely.
+`DevicePageCache` is that residency set: a small LRU keyed by (tag, index),
+bounded by page count and optionally by bytes so it never competes with the
+working set for device memory.
+
+Pages are immutable after preprocessing (quantized ELLPACK bins), so there is
+no invalidation protocol — eviction is purely capacity-driven.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Hashable
+
+
+class DevicePageCache:
+    """Bounded LRU of device buffers keyed by a hashable page identity."""
+
+    def __init__(self, max_pages: int = 8, max_bytes: int | None = None):
+        if max_pages <= 0:
+            raise ValueError(f"max_pages must be positive, got {max_pages}")
+        self.max_pages = max_pages
+        self.max_bytes = max_bytes
+        self._entries: "OrderedDict[Hashable, tuple[Any, int]]" = OrderedDict()
+        self._nbytes = 0
+        self.hits = 0
+        self.misses = 0
+
+    @property
+    def n_pages(self) -> int:
+        return len(self._entries)
+
+    @property
+    def nbytes(self) -> int:
+        return self._nbytes
+
+    def lookup(self, key: Hashable) -> tuple[Any, int] | None:
+        """(value, nbytes as recorded at put time) on a hit, else None."""
+        entry = self._entries.get(key)
+        if entry is None:
+            self.misses += 1
+            return None
+        self._entries.move_to_end(key)
+        self.hits += 1
+        return entry
+
+    def get(self, key: Hashable) -> Any | None:
+        entry = self.lookup(key)
+        return entry[0] if entry is not None else None
+
+    def put(self, key: Hashable, value: Any, nbytes: int) -> None:
+        old = self._entries.pop(key, None)
+        if old is not None:
+            self._nbytes -= old[1]
+        self._entries[key] = (value, nbytes)
+        self._nbytes += nbytes
+        self._evict()
+
+    def _evict(self) -> None:
+        while len(self._entries) > self.max_pages or (
+            self.max_bytes is not None and self._nbytes > self.max_bytes
+        ):
+            _, (_, nbytes) = self._entries.popitem(last=False)
+            self._nbytes -= nbytes
+
+    def clear(self) -> None:
+        self._entries.clear()
+        self._nbytes = 0

@@ -55,6 +55,26 @@ tree_c, _ = grow_tree_distributed(mesh, bins, g, h, 16, bv, tp, cfg3,
                                   ell.cuts.values, ell.cuts.ptrs)
 assert float(jnp.mean((tree_c.feature == res.tree.feature).astype(jnp.float32))) > 0.95
 
+# ---- out-of-core + distributed: pages stream through PageStream, each
+# staged page row-sharded over the mesh; must match the in-core tree ----
+from repro.core.ellpack import EllpackPage
+from repro.distributed import grow_tree_distributed_paged, sharded_page_put
+from repro.pipeline import PageStream
+
+bins_u8 = ell.single_page().bins
+extents = [(i * 256, 256) for i in range(4)]
+pages = [EllpackPage(bins=bins_u8[lo:lo + nr], row_offset=lo) for lo, nr in extents]
+def make_stream():
+    return PageStream.from_host_pages(
+        pages, to_array=lambda p: np.ascontiguousarray(p.bins),
+        put=sharded_page_put(mesh, cfg))
+tree_p, pos_p = grow_tree_distributed_paged(mesh, make_stream, extents, g, h, 16,
+                                            bv, tp, cfg, ell.cuts.values, ell.cuts.ptrs)
+assert bool(jnp.all(res.tree.feature == tree_p.feature))
+assert bool(jnp.all(res.tree.split_bin == tree_p.split_bin))
+assert float(jnp.abs(res.tree.leaf_value - tree_p.leaf_value).max()) < 1e-5
+assert bool(jnp.all(res.positions == pos_p))
+
 # ---- full boosting step fn (dry-run target) executes and reduces loss ----
 step = make_gbdt_step_fn(mesh, tp, 16, cfg, learning_rate=0.3,
                          objective="binary:logistic", sampling_f=0.5)

@@ -1,6 +1,8 @@
 """Quantile sketch (Alg. 2/3): exactness, batch-invariance, merge, hypothesis properties."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need the dev extra (pip install -e '.[dev]')")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.ellpack import bin_batch

@@ -10,8 +10,8 @@ from repro.models.serve import init_cache
 from repro.models.transformer import init_params
 from repro.sharding.rules import MeshAxes, param_specs, serve_cache_specs
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH_POD = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = AbstractMesh((("data", 16), ("model", 16)))
+MESH_POD = AbstractMesh((("pod", 2), ("data", 16), ("model", 16)))
 AXES = MeshAxes(data=("data",), model="model")
 AXES_POD = MeshAxes(data=("pod", "data"), model="model")
 

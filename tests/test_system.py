@@ -33,6 +33,7 @@ def higgs():
     return train, train.materialize(), evals.materialize()
 
 
+@pytest.mark.slow
 def test_end_to_end_beats_baseline(higgs):
     train_src, (X, y), (Xe, ye) = higgs
     b = ExternalGradientBooster(BoosterParams(seed=0, **PARAMS), page_bytes=16 * 1024)
@@ -42,6 +43,7 @@ def test_end_to_end_beats_baseline(higgs):
     assert b.eval_history[-1].value > b.eval_history[0].value
 
 
+@pytest.mark.slow
 def test_sampling_auc_close(higgs):
     """Fig-1 claim: sampled AUC within a small margin of full-data AUC."""
     train_src, (X, y), (Xe, ye) = higgs

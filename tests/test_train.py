@@ -28,6 +28,7 @@ def batch():
     return {"tokens": jnp.asarray(rng.integers(0, 128, (8, 32)), jnp.int32)}
 
 
+@pytest.mark.slow
 def test_train_step_reduces_loss(batch):
     state = init_state(jax.random.PRNGKey(0), CFG, OC)
     step = jax.jit(make_train_step(CFG, OC))
@@ -55,6 +56,7 @@ def test_cosine_schedule_monotone_decay():
     assert abs(vals[-1] - 0.1) < 1e-3
 
 
+@pytest.mark.slow
 def test_mvs_step_keeps_roughly_f(batch):
     state = init_state(jax.random.PRNGKey(0), CFG, OC)
     step = jax.jit(make_mvs_train_step(CFG, OC, TrainConfig(mvs_f=0.5)))
