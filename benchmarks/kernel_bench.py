@@ -14,6 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row, save_result
+from repro.core.histcache import HistogramCache
+from repro.core.tree import TreeParams, grow_tree
 from repro.kernels import ops
 
 
@@ -24,6 +26,52 @@ def _bench(fn, *args, iters=10) -> float:
         out = fn(*args)
     jax.block_until_ready(out)
     return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _subtraction_rows(quick: bool) -> tuple[str, dict]:
+    """Histogram subtraction trick: per-tree built-vs-derived node ledger and
+    wall-clock, full build vs build-smaller-child + derive-sibling."""
+    rng = np.random.default_rng(1)
+    n, m, B, depth = (8192 if quick else 32768), 16, 32, 6
+    bins = jnp.asarray(rng.integers(0, B, (n, m)).astype(np.int32))
+    g = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    h = jnp.asarray((rng.random(n) + 0.1).astype(np.float32))
+    bv = jnp.ones((m, B), bool)
+    tp_sub = TreeParams(max_depth=depth, hist_subtraction=True)
+    tp_full = TreeParams(max_depth=depth, hist_subtraction=False)
+
+    cache = HistogramCache(enabled=True)  # one measured tree for the ledger
+    grow_tree(bins, g, h, B, bv, tp_sub, hist_cache=cache).tree.leaf_value.block_until_ready()
+
+    iters = 2 if quick else 4
+    us_sub = _bench(lambda: grow_tree(bins, g, h, B, bv, tp_sub).tree.leaf_value, iters=iters)
+    us_full = _bench(lambda: grow_tree(bins, g, h, B, bv, tp_full).tree.leaf_value, iters=iters)
+
+    s = cache.stats
+    # node-rows = rows scanned into materialized node histograms, incl. the
+    # root level (n rows, built in both modes)
+    full_node_rows = n + s.total_rows
+    sub_node_rows = n + s.built_rows
+    ratio = full_node_rows / max(sub_node_rows, 1.0)
+    payload = {
+        "max_depth": depth,
+        "n_rows": n,
+        "built_nodes": s.built_nodes + 1,  # + root
+        "derived_nodes": s.derived_nodes,
+        "built_node_rows": sub_node_rows,
+        "full_build_node_rows": full_node_rows,
+        "node_rows_ratio": round(ratio, 3),
+        "tree_us_subtraction": us_sub,
+        "tree_us_full_build": us_full,
+        "tree_speedup": round(us_full / us_sub, 3),
+    }
+    row = csv_row(
+        "kernel_hist_subtraction",
+        us_sub,
+        f"node_rows_ratio={ratio:.2f}x built={payload['built_nodes']}"
+        f" derived={s.derived_nodes} speedup={us_full / us_sub:.2f}x",
+    )
+    return row, payload
 
 
 def main(quick: bool = False) -> list[str]:
@@ -53,15 +101,19 @@ def main(quick: bool = False) -> list[str]:
     lf = jnp.asarray(rng.random(2 * N + 1) < 0.2)
     us_part = _bench(lambda: ops.partition_rows(bins, pos, feat, sb, dl, lf, impl="ref"))
 
+    sub_row, sub_payload = _subtraction_rows(quick)
+
     save_result("kernel_bench", {
         "histogram_us": us_hist, "bin_values_us": us_bin, "partition_us": us_part,
         "histogram_rows_per_s": rows_per_s, "mxu_arithmetic_intensity": intensity,
+        "hist_subtraction": sub_payload,
     })
     return [
         csv_row("kernel_histogram", us_hist, f"rows_per_s={rows_per_s:.0f}"),
         csv_row("kernel_bin_values", us_bin, f"n={n}"),
         csv_row("kernel_partition", us_part, f"n={n}"),
         csv_row("kernel_hist_mxu_intensity", 0.0, f"{intensity:.1f}_flops_per_byte"),
+        sub_row,
     ]
 
 

@@ -1,18 +1,41 @@
 """Benchmark harness: one entry per paper table/figure (+ kernels).
 
 Prints ``name,us_per_call,derived`` CSV. ``--quick`` shrinks sweeps.
+``--json <path>`` additionally writes the collected rows to exactly that
+path as a machine-readable perf record (one {name, us_per_call, derived,
+timestamp} object per row). Checked-in baselines follow the
+``BENCH_<suite>.json`` naming convention at the repo root (e.g.
+``--only kernel_bench --json BENCH_kernels.json``) so the perf trajectory
+is diffable across PRs.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
+
+
+def write_json_record(path: str, rows: list[str], quick: bool) -> None:
+    ts = time.strftime("%Y-%m-%d %H:%M:%S")
+    records = []
+    for row in rows:
+        name, us, derived = row.split(",", 2)
+        records.append(
+            {"name": name, "us_per_call": float(us), "derived": derived, "timestamp": ts}
+        )
+    with open(path, "w") as fh:
+        json.dump({"schema": "bench-v1", "quick": quick, "records": records}, fh, indent=1)
+        fh.write("\n")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None, help="comma-separated benchmark names")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the rows as a JSON perf record at PATH "
+                         "(checked-in baselines: BENCH_<suite>.json)")
     args = ap.parse_args()
 
     from benchmarks import kernel_bench, max_data_size, sampling_methods
@@ -29,6 +52,7 @@ def main() -> None:
 
     print("name,us_per_call,derived")
     failures = 0
+    all_rows: list[str] = []
     for name, fn in table.items():
         if only and name not in only:
             continue
@@ -36,10 +60,13 @@ def main() -> None:
         try:
             for row in fn(quick=args.quick):
                 print(row, flush=True)
+                all_rows.append(row)
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{name},-1,ERROR:{type(e).__name__}:{e}", flush=True)
         print(f"# {name} took {time.perf_counter()-t0:.1f}s", file=sys.stderr)
+    if args.json:
+        write_json_record(args.json, all_rows, args.quick)
     if failures:
         raise SystemExit(failures)
 

@@ -3,6 +3,12 @@
 Modes (CPU-scaled): in-core, out-of-core streaming (f=1.0, Alg. 6),
 out-of-core sampled (Alg. 7) at f in {0.5, 0.3, 0.1}. Paper hyperparams:
 max_depth=8->6 (scaled), learning_rate=0.1, default otherwise.
+
+The out-of-core f=1.0 mode also runs with histogram subtraction disabled
+(``_fullbuild``): the two must reach the same AUC (+-1e-3; subtraction is
+exact up to f32 accumulation order) while the default builds ~half the
+per-level node histograms — the derived column reports the built/derived
+ledger and the AUC delta.
 """
 from __future__ import annotations
 
@@ -22,7 +28,9 @@ from repro.core.objectives import auc
 from repro.data.pages import TransferStats
 
 
-def _params(sampling: SamplingConfig | None = None) -> BoosterParams:
+def _params(
+    sampling: SamplingConfig | None = None, hist_subtraction: bool = True
+) -> BoosterParams:
     return BoosterParams(
         n_estimators=N_TREES,
         max_depth=MAX_DEPTH,
@@ -31,6 +39,7 @@ def _params(sampling: SamplingConfig | None = None) -> BoosterParams:
         objective="binary:logistic",
         sampling=sampling or SamplingConfig(),
         seed=0,
+        hist_subtraction=hist_subtraction,
     )
 
 
@@ -40,11 +49,14 @@ def main(quick: bool = False) -> list[str]:
     Xe, ye = eval_src.materialize()
     out_rows, results = [], {}
 
+    raw_auc: dict[str, float] = {}  # unrounded, for threshold comparisons
+
     def record(mode: str, fit_fn):
         t0 = time.perf_counter()
         booster, stats = fit_fn()
         dt = time.perf_counter() - t0
         a = auc(ye, booster.predict(Xe))
+        raw_auc[mode] = float(a)
         results[mode] = {
             "seconds": round(dt, 2), "auc": round(a, 4),
             "h2d_mib": round((stats.host_to_device_bytes if stats else 0) / 2**20, 1),
@@ -55,20 +67,42 @@ def main(quick: bool = False) -> list[str]:
         extra = f"auc={a:.4f}"
         if stats is not None:
             extra += f" overlap={stats.overlap_ratio:.2f}"
+        hc = getattr(booster, "hist_cache", None)
+        if hc is not None and hc.stats.levels:  # subtraction ledger (all trees)
+            results[mode]["hist_built_nodes"] = hc.stats.built_nodes
+            results[mode]["hist_derived_nodes"] = hc.stats.derived_nodes
+            results[mode]["hist_node_rows_ratio"] = round(hc.stats.node_rows_ratio, 3)
+            extra += f" hist_derived={hc.stats.derived_nodes}"
         out_rows.append(csv_row(f"table2_{mode}", dt * 1e6 / N_TREES, extra))
 
     record("gpu_in_core", lambda: (GradientBooster(_params()).fit(X, y), None))
 
-    def ooc(f: float | None):
+    def ooc(f: float | None, hist_subtraction: bool = True):
         stats = TransferStats()
         cfg = SamplingConfig(method="mvs", f=f) if f else SamplingConfig()
-        b = ExternalGradientBooster(_params(cfg), page_bytes=PAGE_BYTES, stats=stats)
+        b = ExternalGradientBooster(
+            _params(cfg, hist_subtraction), page_bytes=PAGE_BYTES, stats=stats
+        )
         b.fit(train_src)
         return b, stats
 
     record("gpu_out_of_core_f1.0", lambda: ooc(None))
+    record("gpu_out_of_core_f1.0_fullbuild", lambda: ooc(None, hist_subtraction=False))
     for f in ([0.3] if quick else [0.5, 0.3, 0.1]):
         record(f"gpu_out_of_core_f{f}", lambda f=f: ooc(f))
+
+    # subtraction must not change what the model learns (+-1e-3 AUC);
+    # compare the unrounded values — the stored ones are display-rounded
+    auc_delta = abs(
+        raw_auc["gpu_out_of_core_f1.0"] - raw_auc["gpu_out_of_core_f1.0_fullbuild"]
+    )
+    results["hist_subtraction"] = {
+        "auc_delta_vs_fullbuild": round(auc_delta, 6),
+        "auc_match_1e-3": bool(auc_delta <= 1e-3),
+    }
+    out_rows.append(
+        csv_row("table2_hist_subtraction_auc_delta", 0.0, f"auc_delta={auc_delta:.6f}")
+    )
 
     results["paper_table2"] = {
         "gpu_in_core": {"seconds": 241.52, "auc": 0.8398},

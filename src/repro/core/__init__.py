@@ -10,6 +10,7 @@ from repro.core.ellpack import (
     create_ellpack_inmemory,
     create_ellpack_pages,
 )
+from repro.core.histcache import HistCacheStats, HistogramCache, LevelPlan
 from repro.core.memory import DeviceMemoryModel
 from repro.core.objectives import LOGISTIC, SQUARED_ERROR, get_objective
 from repro.core.outofcore import ExternalGradientBooster
@@ -41,6 +42,9 @@ __all__ = [
     "create_ellpack_inmemory",
     "create_ellpack_pages",
     "DeviceMemoryModel",
+    "HistCacheStats",
+    "HistogramCache",
+    "LevelPlan",
     "LOGISTIC",
     "SQUARED_ERROR",
     "get_objective",

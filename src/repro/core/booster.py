@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.core import objectives as obj_lib
 from repro.core.ellpack import EllpackMatrix, create_ellpack_inmemory
+from repro.core.histcache import HistogramCache
 from repro.core.quantile import HistogramCuts
 from repro.core.sampling import SamplingConfig, sample
 from repro.core.split import SplitParams
@@ -48,6 +49,10 @@ class BoosterParams:
     seed: int = 0
     kernel_impl: str = "auto"  # auto | pallas | ref
     early_stopping_rounds: int | None = None
+    # histogram subtraction trick: per level, build only the smaller child of
+    # each split pair and derive the sibling as parent - built (see
+    # core/histcache.py); False forces the full per-node build
+    hist_subtraction: bool = True
 
     def tree_params(self) -> TreeParams:
         return TreeParams(
@@ -57,6 +62,7 @@ class BoosterParams:
                 gamma=self.gamma,
                 min_child_weight=self.min_child_weight,
             ),
+            hist_subtraction=self.hist_subtraction,
         )
 
 
@@ -90,6 +96,8 @@ class GradientBooster:
         self.cuts: HistogramCuts | None = None
         self.base_margin_: float = 0.0
         self.eval_history: list[EvalRecord] = []
+        # build-vs-derive ledger accumulated over every tree of the last fit
+        self.hist_cache = HistogramCache(enabled=params.hist_subtraction)
         self._rng = jax.random.PRNGKey(params.seed)
 
     # ------------------------------------------------------------------ fit
@@ -103,6 +111,8 @@ class GradientBooster:
         cuts: HistogramCuts | None = None,
     ) -> "GradientBooster":
         p = self.params
+        # fresh ledger: stats cover exactly this fit() call
+        self.hist_cache = HistogramCache(enabled=p.hist_subtraction)
         y = np.asarray(y, dtype=np.float32)
         ell: EllpackMatrix = create_ellpack_inmemory(
             X, max_bin=min(p.max_bin, 255), cuts=cuts
@@ -146,6 +156,7 @@ class GradientBooster:
                 cut_values=ell.cuts.values,
                 cut_ptrs=ell.cuts.ptrs,
                 impl=p.kernel_impl,
+                hist_cache=self.hist_cache,
             )
             self.trees.append(res.tree)
             margin = margin + p.learning_rate * res.tree.leaf_value[res.positions]

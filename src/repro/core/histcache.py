@@ -1,0 +1,191 @@
+"""Histogram subtraction cache (Mitchell et al.'s GPU GBDT optimization).
+
+Every split partitions a parent node's rows into its two children, and the
+gradient histogram is additive over rows, so
+
+    hist(parent) == hist(left) + hist(right)        (exactly, per (g, h) bin)
+
+holds at every level. Instead of building histograms for *all* 2^d nodes of
+level d, the builder therefore only needs the smaller child of each split
+pair — the sibling is derived as ``parent - built``. This roughly halves the
+dominant BuildHistograms cost (and, in the out-of-core builder, the per-page
+scatter work of every disk->host->device pass).
+
+`HistogramCache` owns that machinery for all three builders:
+
+  plan(count, level_counts)  partition the level's nodes into a *build* set
+                             (smaller child of each pair, by row count from
+                             repartition) and a *derive* set; emits a
+                             `LevelPlan` whose ``node_map`` compacts build
+                             nodes to ``count // 2`` kernel slots (-1 for
+                             derive nodes — their rows contribute to no bin)
+  expand(plan, built)        reconstruct the full level histogram from the
+                             compact build histogram and the cached previous
+                             level (``derived = parent - built``), then cache
+                             it for the next level
+
+The node choice uses exact row counts (`level_row_counts` over the positions
+produced by RepartitionInstances), so every builder — in-core, paged
+out-of-core, and distributed — makes identical build/derive decisions and the
+resulting trees match the full-build baseline bit-for-bit up to f32
+accumulation order.
+
+Shapes stay static under jit: at depth >= 1 exactly ``count // 2`` slots are
+built (dead pairs — parent did not split — waste a slot holding zeros; their
+children are masked as non-growable by the driver, so the garbage sibling
+derivation for them is never consumed).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+class LevelPlan(NamedTuple):
+    """Build/derive split of one tree level's nodes.
+
+    ``node_map`` is None for a full build (root level, cache disabled, or no
+    counts yet); otherwise ``node_map[j]`` maps level-local node j to its
+    compacted build slot, or -1 if j's histogram is derived by subtraction.
+    """
+
+    node_map: Array | None  # (count,) int32, or None = build everything
+    n_build: int  # static: number of histogram slots the kernel materializes
+    count: int  # static: nodes at this level
+
+
+@dataclasses.dataclass
+class HistCacheStats:
+    """Build-vs-derive ledger (levels >= 1; the root build is counted by the
+    caller since the cache never sees the root row count).
+
+    Row totals accumulate as device scalars — no host sync in the level loop —
+    and convert to floats only when `built_rows` / `total_rows` are read.
+    """
+
+    levels: int = 0
+    built_nodes: int = 0
+    derived_nodes: int = 0
+    _built_rows_acc: Array | None = dataclasses.field(default=None, repr=False)
+    _total_rows_acc: Array | None = dataclasses.field(default=None, repr=False)
+
+    def _add_rows(self, built: Array, total: Array) -> None:
+        # f32 accumulation: int32 would wrap past 2^31 rows over a long fit
+        # (10M rows x deep trees x hundreds of rounds), and int64 needs x64
+        built = built.astype(jnp.float32)
+        total = total.astype(jnp.float32)
+        if self._built_rows_acc is None:
+            self._built_rows_acc, self._total_rows_acc = built, total
+        else:
+            self._built_rows_acc = self._built_rows_acc + built
+            self._total_rows_acc = self._total_rows_acc + total
+
+    @property
+    def built_rows(self) -> float:
+        """Rows scanned into built node histograms (subtraction mode)."""
+        return float(self._built_rows_acc) if self._built_rows_acc is not None else 0.0
+
+    @property
+    def total_rows(self) -> float:
+        """Rows a full per-node build would have scanned."""
+        return float(self._total_rows_acc) if self._total_rows_acc is not None else 0.0
+
+    @property
+    def node_rows_ratio(self) -> float:
+        """How many times fewer node-rows the subtraction build materializes
+        (levels >= 1). >= 2 when children split evenly."""
+        built = self.built_rows
+        return self.total_rows / built if built else 1.0
+
+
+@functools.partial(jax.jit, static_argnames=("offset", "count"))
+def level_row_counts(positions: Array, offset: int, count: int) -> Array:
+    """Rows per level-local node; frozen/out-of-level rows count nowhere."""
+    lp = positions.astype(jnp.int32) - offset
+    valid = (positions >= offset) & (lp < count)
+    safe = jnp.where(valid, lp, count)  # overflow slot for non-level rows
+    return jnp.zeros(count + 1, jnp.int32).at[safe].add(1)[:count]
+
+
+def plan_level(count: int, level_counts: Array) -> tuple[Array, Array]:
+    """(node_map, build_left) for one level: build the smaller child of each
+    sibling pair (ties build left — deterministic, so every builder agrees)."""
+    pairs = count // 2
+    left = level_counts[0::2]
+    right = level_counts[1::2]
+    build_left = left <= right  # (pairs,)
+    slots = jnp.arange(pairs, dtype=jnp.int32)
+    node_map = jnp.stack(
+        [jnp.where(build_left, slots, -1), jnp.where(build_left, -1, slots)],
+        axis=1,
+    ).reshape(count)
+    return node_map, build_left
+
+
+def expand_level(parent_hist: Array, built: Array, build_left: Array) -> Array:
+    """Full level histogram from the compact build half: the built child keeps
+    its histogram, the sibling is ``parent - built`` (exact up to f32 order)."""
+    derived = parent_hist - built
+    mask = build_left.reshape((-1,) + (1,) * (built.ndim - 1))
+    left = jnp.where(mask, built, derived)
+    right = jnp.where(mask, derived, built)
+    pairs = built.shape[0]
+    return jnp.stack([left, right], axis=1).reshape((2 * pairs,) + built.shape[1:])
+
+
+
+
+class HistogramCache:
+    """Retains the previous level's full per-node histograms and plans the
+    build/derive node split for the next one. One instance per tree (or per
+    forest — `reset` is called at the start of every `grow_tree_generic` and
+    clears the level state but keeps the accumulated `stats`)."""
+
+    def __init__(self, enabled: bool = True):
+        self.enabled = enabled
+        self.stats = HistCacheStats()
+        self._prev: Array | None = None
+        self._build_left: Array | None = None
+
+    def reset(self) -> None:
+        self._prev = None
+        self._build_left = None
+
+    def plan(self, count: int, level_counts: Array | None) -> LevelPlan:
+        subtract = (
+            self.enabled
+            and count > 1
+            and self._prev is not None
+            and level_counts is not None
+        )
+        if not subtract:
+            self._build_left = None
+            return LevelPlan(node_map=None, n_build=count, count=count)
+        node_map, build_left = plan_level(count, level_counts)
+        self._build_left = build_left
+        self.stats.levels += 1
+        self.stats.built_nodes += count // 2
+        self.stats.derived_nodes += count - count // 2
+        built = jnp.sum(jnp.minimum(level_counts[0::2], level_counts[1::2]))
+        total = jnp.sum(level_counts)
+        # tracers would leak out of a jitted caller's trace; drop stats there
+        if not isinstance(built, jax.core.Tracer):
+            self.stats._add_rows(built, total)
+        return LevelPlan(node_map=node_map, n_build=count // 2, count=count)
+
+    def expand(self, plan: LevelPlan, built: Array) -> Array:
+        """Compact build histogram -> full (count, m, n_bins, 2) level
+        histogram; caches the result as the next level's parent."""
+        if plan.node_map is None:
+            full = built
+        else:
+            full = expand_level(self._prev, built, self._build_left)
+        if self.enabled:
+            self._prev = full
+        return full

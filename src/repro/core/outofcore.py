@@ -39,6 +39,7 @@ from repro.core.ellpack import (
     bin_batch,
     create_ellpack_pages,
 )
+from repro.core.histcache import HistogramCache, LevelPlan, level_row_counts
 from repro.core.quantile import QuantileSketch
 from repro.core.sampling import sample
 from repro.core.tree import (
@@ -138,6 +139,7 @@ def build_tree_paged(
     cut_values=None,
     cut_ptrs=None,
     impl: str = "auto",
+    hist_cache: HistogramCache | None = None,
 ) -> tuple[object, dict[int, Array]]:
     """Level-wise tree build over streamed pages (Alg. 6 core).
 
@@ -147,29 +149,40 @@ def build_tree_paged(
     `distributed.grow_tree_distributed_paged` (which differ only in how the
     stream stages pages). Returns (tree, per-page positions keyed by stream
     index, in `page_extents` order).
+
+    With histogram subtraction (the default) the per-level stream pass only
+    scatters rows belonging to *build* nodes — rows at derive-set nodes
+    contribute to no bin — so each disk->host->device pass does roughly half
+    the histogram work at depth >= 1.
     """
     g_j, h_j = jnp.asarray(g), jnp.asarray(h)
     positions: dict[int, Array] = {
         i: jnp.zeros(nr, jnp.int32) for i, (_, nr) in enumerate(page_extents)
     }
 
-    def hist_fn(offset: int, count: int) -> Array:
+    def hist_fn(offset: int, count: int, plan: LevelPlan) -> Array:
         # one double-buffered pass per level; page k+1 stages while page k's
         # histogram kernel runs
         return ops.build_histogram_paged(
-            make_stream(), g_j, h_j, positions, offset, count, n_bins, impl=impl
+            make_stream(), g_j, h_j, positions, offset, plan.n_build, n_bins,
+            node_map=plan.node_map, impl=impl,
         )
 
-    def partition_fn(feature, split_bin, default_left, is_leaf) -> None:
+    def partition_fn(feature, split_bin, default_left, is_leaf, count_level):
+        counts = None
         for sp in make_stream():
             positions[sp.index] = ops.partition_rows(
                 sp.device, positions[sp.index], feature, split_bin,
                 default_left, is_leaf, impl=impl,
             )
+            if count_level is not None:
+                c = level_row_counts(positions[sp.index], *count_level)
+                counts = c if counts is None else counts + c
+        return counts
 
     tree = grow_tree_generic(
         hist_fn, partition_fn, jnp.sum(g_j), jnp.sum(h_j), n_bins, bin_valid,
-        tp, cut_values, cut_ptrs,
+        tp, cut_values, cut_ptrs, hist_cache=hist_cache,
     )
     return tree, positions
 
@@ -263,6 +276,9 @@ class ExternalGradientBooster(GradientBooster):
         start_iteration: int = 0,
     ) -> "ExternalGradientBooster":
         p = self.params
+        # fresh ledger unless resuming mid-boosting (keep the run's totals)
+        if start_iteration == 0:
+            self.hist_cache = HistogramCache(enabled=p.hist_subtraction)
         if self.pages is None:
             self.preprocess(source)
         pages, labels = self.pages, self.labels_
@@ -373,7 +389,7 @@ class ExternalGradientBooster(GradientBooster):
         res = grow_tree(
             bins_c, jnp.asarray(g_np), jnp.asarray(h_np), n_bins, bin_valid, tp,
             cut_values=self.cuts.values, cut_ptrs=self.cuts.ptrs,
-            impl=p.kernel_impl,
+            impl=p.kernel_impl, hist_cache=self.hist_cache,
         )
         # positions only cover sampled rows -> margin update must stream pages
         return TreeBuildResult(tree=res.tree, positions=None)
@@ -385,6 +401,7 @@ class ExternalGradientBooster(GradientBooster):
         tree, positions = build_tree_paged(
             self._stream, extents, g, h, n_bins, bin_valid, tp,
             self.cuts.values, self.cuts.ptrs, impl=self.params.kernel_impl,
+            hist_cache=self.hist_cache,
         )
         # final positions point at leaves: margin update without re-streaming
         pos_full = np.empty(pages.n_rows, np.int32)

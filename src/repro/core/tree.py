@@ -3,15 +3,22 @@
 Trees use a complete-binary-tree array layout (node i -> children 2i+1, 2i+2,
 n_total = 2^(max_depth+1) - 1) so every step is static-shaped and jit-able:
 
-  level d:  histogram over active nodes  (kernels.ops.build_histogram)
-            -> EvaluateSplit             (core.split.evaluate_splits)
-            -> RepartitionInstances      (kernels.ops.partition_rows)
+  level d:  histogram over *build* nodes  (kernels.ops.build_histogram)
+            -> sibling derivation         (core.histcache: parent - built)
+            -> EvaluateSplit              (core.split.evaluate_splits)
+            -> RepartitionInstances       (kernels.ops.partition_rows)
 
 `grow_tree_generic` drives the levels through two callbacks — histogram
 accumulation and row repartition — so the same driver serves:
   * the in-core builder (`grow_tree`, one device-resident page, Alg. 1),
   * the out-of-core streaming builder (page loop per level, Alg. 6),
-  * the distributed builder (per-shard histograms + psum, §2.2 AllReduce).
+  * the distributed paged builder (sharded staging + per-page mesh reduce).
+
+A `HistogramCache` sits between the driver and the callbacks: per level it
+plans which nodes must actually be built (the smaller child of each split
+pair) and derives every sibling by subtraction from the cached parent level —
+see `core/histcache.py`. Disable per tree with
+``TreeParams(hist_subtraction=False)`` to force the full build.
 
 Rows carry a global node-id position; once their node becomes a leaf the
 position freezes, so after the last level `leaf_value[pos]` is the tree's
@@ -26,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.histcache import HistogramCache, LevelPlan, level_row_counts
 from repro.core.split import LevelSplits, SplitParams, evaluate_splits, leaf_weight
 from repro.kernels import ops
 
@@ -55,6 +63,9 @@ class TreeArrays(NamedTuple):
 class TreeParams:
     max_depth: int = 6
     split: SplitParams = SplitParams()
+    # build only the smaller child of each split pair per level and derive the
+    # sibling histogram as parent - built (exact up to f32 accumulation order)
+    hist_subtraction: bool = True
 
     @property
     def n_total_nodes(self) -> int:
@@ -66,8 +77,32 @@ class TreeBuildResult(NamedTuple):
     positions: Array  # (n_rows,) final leaf node per training row
 
 
-HistFn = Callable[[int, int], Array]  # (offset, count) -> (count, m, n_bins, 2)
-PartitionFn = Callable[[Array, Array, Array, Array], None]
+# HistFn(offset, count, plan) -> (plan.n_build, m, n_bins, 2)
+#
+# ``offset``/``count`` locate the level in the complete-tree layout (global
+# node ids [offset, offset + count)). ``plan`` is the level's `LevelPlan`:
+# when ``plan.node_map`` is None the driver wants the full level histogram
+# (all ``count`` nodes, plan.n_build == count); otherwise the driver receives
+# only the *build subset* — implementations must route each row's level-local
+# node id through ``plan.node_map`` (pass it to `ops.build_histogram` /
+# `ops.build_histogram_paged`, which do the remap) so rows at derive-set nodes
+# contribute to no bin and only ``plan.n_build`` node histograms are
+# materialized. The driver reconstructs derive-set histograms by subtraction
+# from the cached parent level before split evaluation.
+HistFn = Callable[[int, int, LevelPlan], Array]
+
+# PartitionFn(feature, split_bin, default_left, is_leaf, count_level)
+#   -> (next_count,) int32 row counts per next-level node, or None
+#
+# Repartitions every live row to its child node. ``count_level`` is None when
+# the driver has no use for row counts (subtraction off, or no histogram
+# follows); otherwise it is the next level's ``(offset, count)`` node extent
+# and the implementation must return that level's per-node row counts (summed
+# across pages/shards — use `core.histcache.level_row_counts`) so the cache
+# can put the smaller child of each pair in the build set.
+PartitionFn = Callable[
+    [Array, Array, Array, Array, "tuple[int, int] | None"], Array | None
+]
 
 
 def grow_tree_generic(
@@ -80,9 +115,15 @@ def grow_tree_generic(
     params: TreeParams,
     cut_values: np.ndarray | None = None,
     cut_ptrs: np.ndarray | None = None,
+    hist_cache: HistogramCache | None = None,
 ) -> TreeArrays:
     n_total = params.n_total_nodes
     max_depth = params.max_depth
+    cache = hist_cache if hist_cache is not None else HistogramCache(
+        enabled=params.hist_subtraction
+    )
+    cache.reset()
+    level_counts: Array | None = None
 
     feature = jnp.zeros(n_total, jnp.int32)
     split_bin = jnp.zeros(n_total, jnp.int32)
@@ -95,7 +136,9 @@ def grow_tree_generic(
     for depth in range(max_depth):
         offset = 2**depth - 1
         count = 2**depth
-        hist = hist_fn(offset, count)
+        plan = cache.plan(count, level_counts)
+        built = hist_fn(offset, count, plan)
+        hist = cache.expand(plan, built)
         lvl_g = jax.lax.dynamic_slice(node_g, (offset,), (count,))
         lvl_h = jax.lax.dynamic_slice(node_h, (offset,), (count,))
         splits: LevelSplits = evaluate_splits(hist, lvl_g, lvl_h, bin_valid, params.split)
@@ -126,7 +169,16 @@ def grow_tree_generic(
         is_leaf = is_leaf.at[left_idx].set(~do_split)
         is_leaf = is_leaf.at[right_idx].set(~do_split)
 
-        partition_fn(feature, split_bin, default_left, is_leaf)
+        # counts feed the next level's build/derive plan; skip the bincount
+        # when no histogram follows (last level) or subtraction is off
+        count_level = (
+            (2 ** (depth + 1) - 1, 2 ** (depth + 1))
+            if cache.enabled and depth + 1 < max_depth
+            else None
+        )
+        level_counts = partition_fn(
+            feature, split_bin, default_left, is_leaf, count_level
+        )
 
     # final level: every still-growable node is a leaf with eq.-(6) weight
     offset = 2**max_depth - 1
@@ -172,19 +224,26 @@ def grow_tree(
     cut_values: np.ndarray | None = None,
     cut_ptrs: np.ndarray | None = None,
     impl: str = "auto",
+    hist_cache: HistogramCache | None = None,
 ) -> TreeBuildResult:
     """In-core builder (paper Alg. 1): one device-resident ELLPACK page."""
     n_rows = bins.shape[0]
     pos_box = [jnp.zeros(n_rows, jnp.int32)]
 
-    def hist_fn(offset: int, count: int) -> Array:
+    def hist_fn(offset: int, count: int, plan: LevelPlan) -> Array:
         level_pos = jnp.where(pos_box[0] >= offset, pos_box[0] - offset, -1)
-        return ops.build_histogram(bins, g, h, level_pos, count, n_bins, impl=impl)
+        return ops.build_histogram(
+            bins, g, h, level_pos, plan.n_build, n_bins,
+            node_map=plan.node_map, impl=impl,
+        )
 
-    def partition_fn(feature, split_bin, default_left, is_leaf) -> None:
+    def partition_fn(feature, split_bin, default_left, is_leaf, count_level):
         pos_box[0] = ops.partition_rows(
             bins, pos_box[0], feature, split_bin, default_left, is_leaf, impl=impl
         )
+        if count_level is None:
+            return None
+        return level_row_counts(pos_box[0], *count_level)
 
     tree = grow_tree_generic(
         hist_fn,
@@ -196,6 +255,7 @@ def grow_tree(
         params,
         cut_values,
         cut_ptrs,
+        hist_cache=hist_cache,
     )
     return TreeBuildResult(tree=tree, positions=pos_box[0])
 

@@ -9,8 +9,18 @@ Parallelism axes (all optional, compose):
     owning shard broadcasts the per-row left/right decision via psum.
 
 Distributed-optimization tricks:
+  * histogram subtraction (default on, `DistConfig.hist_subtraction`): per
+    level only the smaller child of each split pair is built locally and
+    psum'd — HALF the dominant collective's payload — and every sibling is
+    derived post-reduce as parent - built from the previous level's psum'd
+    histogram (see `core/histcache.py`; build/derive choice uses exact psum'd
+    row counts so all shards and the single-device builder agree);
   * histogram gradient compression: psum payload cast to bf16 (halves the
-    dominant collective; beyond-paper, toggleable, default off);
+    dominant collective; beyond-paper, toggleable, default off, composes with
+    subtraction for a 4x total reduction — note the composition compounds
+    bf16 rounding through the level-by-level derivation chain, so split
+    agreement with the f32 full build loosens with depth; the 8-device test
+    pins >95% agreement at depth 4);
   * per-level single collective: the histogram psum is the only data-sized
     collective per level; split search and partition exchange O(nodes) and
     O(rows/shard) bytes respectively.
@@ -35,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.histcache import expand_level, level_row_counts, plan_level
 from repro.core.split import evaluate_splits, leaf_weight
 from repro.core.tree import TreeArrays, TreeParams
 from repro.kernels import ops, ref
@@ -57,6 +68,7 @@ class DistConfig:
     feature_axis: str | None = None  # "model" for feature-parallel split search
     hist_dtype: str = "float32"  # "bfloat16" -> compressed histogram psum
     kernel_impl: str = "auto"
+    hist_subtraction: bool = True  # psum only the built half, derive siblings
 
     @property
     def all_axes(self) -> tuple[str, ...]:
@@ -128,15 +140,35 @@ def _grow_tree_local(
     node_g = jnp.zeros(n_total, jnp.float32).at[0].set(total_g)
     node_h = jnp.zeros(n_total, jnp.float32).at[0].set(total_h)
     positions = jnp.zeros(local_rows, jnp.int32)
+    prev_hist = None  # previous level's full post-psum histogram
+    level_counts = None  # psum'd per-node row counts for the current level
 
     for depth in range(max_depth):
         offset = 2**depth - 1
         count = 2**depth
         level_pos = jnp.where(positions >= offset, positions - offset, -1)
-        hist_local = ops.build_histogram(
-            bins, g, h, level_pos, count, n_bins, impl=cfg.kernel_impl
+        subtract = (
+            cfg.hist_subtraction
+            and tp.hist_subtraction
+            and prev_hist is not None
+            and level_counts is not None
         )
-        hist = _psum_hist(hist_local, cfg)  # the paper's AllReduce
+        if subtract:
+            # build + psum only the smaller child of each pair (half the
+            # AllReduce payload); derive siblings from the cached parent level
+            node_map, build_left = plan_level(count, level_counts)
+            built_local = ops.build_histogram(
+                bins, g, h, level_pos, count // 2, n_bins,
+                node_map=node_map, impl=cfg.kernel_impl,
+            )
+            built = _psum_hist(built_local, cfg)  # the paper's AllReduce, halved
+            hist = expand_level(prev_hist, built, build_left)
+        else:
+            hist_local = ops.build_histogram(
+                bins, g, h, level_pos, count, n_bins, impl=cfg.kernel_impl
+            )
+            hist = _psum_hist(hist_local, cfg)  # the paper's AllReduce
+        prev_hist = hist
 
         lvl_g = jax.lax.dynamic_slice(node_g, (offset,), (count,))
         lvl_h = jax.lax.dynamic_slice(node_h, (offset,), (count,))
@@ -204,6 +236,14 @@ def _grow_tree_local(
             positions = jnp.where(
                 active, jnp.where(leaf_here, positions, child), -1
             ).astype(jnp.int32)
+
+        # exact global row counts drive the next level's build/derive plan
+        # (identical on every shard, and to the single-device builder's)
+        if cfg.hist_subtraction and tp.hist_subtraction and depth + 1 < max_depth:
+            noff, ncnt = 2 ** (depth + 1) - 1, 2 ** (depth + 1)
+            level_counts = jax.lax.psum(
+                level_row_counts(positions, noff, ncnt), cfg.data_axes
+            )
 
     # final level
     offset = 2**max_depth - 1
@@ -352,13 +392,17 @@ def grow_tree_distributed_paged(
     histogram reduces across the mesh under jit (the §2.2 AllReduce), so the
     level-wise split search is identical to the single-device one — it IS the
     single-device one: `core.outofcore.build_tree_paged`, with mesh placement
-    supplied entirely by the stream's put.
+    supplied entirely by the stream's put. Histogram subtraction (on unless
+    either `cfg` or `tp` disables it) shrinks every per-page histogram pass to
+    the build half of the level.
     """
+    from repro.core.histcache import HistogramCache
     from repro.core.outofcore import build_tree_paged
 
+    cache = HistogramCache(enabled=cfg.hist_subtraction and tp.hist_subtraction)
     tree, positions = build_tree_paged(
         make_stream, list(page_extents), g, h, n_bins, bin_valid, tp,
-        cut_values, cut_ptrs, impl=cfg.kernel_impl,
+        cut_values, cut_ptrs, impl=cfg.kernel_impl, hist_cache=cache,
     )
     pos_full = jnp.concatenate([positions[i] for i in range(len(page_extents))])
     return tree, pos_full

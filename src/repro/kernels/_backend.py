@@ -1,0 +1,22 @@
+"""Backend probing shared by the Pallas kernels and the dispatch layer.
+
+The Pallas kernels take ``interpret: bool | None``. ``None`` (the default)
+resolves at trace time via `resolve_interpret`: compiled on a real TPU,
+interpreter everywhere else — so direct callers get correct behavior without
+knowing the backend, mirroring how `ops._resolve` picks pallas-vs-ref.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:  # pragma: no cover - device probing should not fail
+        return False
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Explicit value wins; None means "interpret unless on a real TPU"."""
+    return (not on_tpu()) if interpret is None else interpret

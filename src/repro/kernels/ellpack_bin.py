@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels._backend import resolve_interpret
+
 MISSING_BIN = 255
 
 
@@ -41,8 +43,9 @@ def bin_values(
     *,
     row_tile: int = 128,
     feat_tile: int = 32,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     n_rows, m = x.shape
     max_bin = padded_edges.shape[1]
     r_pad = -n_rows % row_tile

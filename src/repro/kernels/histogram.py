@@ -24,6 +24,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels._backend import resolve_interpret
+from repro.kernels.ref import apply_node_map
+
 MISSING_BIN = 255
 
 
@@ -80,11 +83,18 @@ def build_histogram(
     positions: jax.Array,
     n_nodes: int,
     n_bins: int,
+    node_map: jax.Array | None = None,  # (level_nodes,) int32 -> build slot or -1
     *,
     row_tile: int = 256,
     feat_tile: int = 8,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    # node_map (histogram subtraction): compact positions to build slots so the
+    # one-hot node contraction and the VMEM out block cover only n_nodes build
+    # nodes; rows at derive nodes drop to -1 and match no one-hot column.
+    interpret = resolve_interpret(interpret)
+    if node_map is not None:
+        positions = apply_node_map(positions, node_map)
     n_rows, m = bins.shape
     r_pad = -n_rows % row_tile
     f_pad = -m % feat_tile

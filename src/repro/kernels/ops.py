@@ -18,17 +18,11 @@ from repro.kernels import ellpack_bin as _ellpack_bin
 from repro.kernels import histogram as _histogram
 from repro.kernels import partition as _partition
 from repro.kernels import ref as _ref
+from repro.kernels._backend import on_tpu as _on_tpu
 
 MISSING_BIN = _ref.MISSING_BIN
 
 _FORCE = os.environ.get("REPRO_KERNEL_IMPL", "")  # optional global override
-
-
-def _on_tpu() -> bool:
-    try:
-        return jax.default_backend() == "tpu"
-    except Exception:  # pragma: no cover - device probing should not fail
-        return False
 
 
 def _resolve(impl: str) -> str:
@@ -46,12 +40,21 @@ _ref_partition_rows = jax.jit(_ref.partition_rows)
 _ref_predict_bins = jax.jit(_ref.predict_bins, static_argnames=("max_depth",))
 
 
-def build_histogram(bins, g, h, positions, n_nodes: int, n_bins: int, impl: str = "auto"):
+def build_histogram(
+    bins, g, h, positions, n_nodes: int, n_bins: int,
+    node_map=None, impl: str = "auto",
+):
+    """``node_map`` (histogram subtraction, see `core.histcache`): level-local
+    node -> compacted build slot (or -1 = derive-by-subtraction node); when
+    given, ``n_nodes`` is the number of build slots and only those are
+    materialized."""
     if _resolve(impl) == "pallas":
         return _histogram.build_histogram(
-            bins, g, h, positions, n_nodes, n_bins, interpret=not _on_tpu()
+            bins, g, h, positions, n_nodes, n_bins, node_map=node_map
         )
-    return _ref_build_histogram(bins, g, h, positions, n_nodes=n_nodes, n_bins=n_bins)
+    return _ref_build_histogram(
+        bins, g, h, positions, n_nodes=n_nodes, n_bins=n_bins, node_map=node_map
+    )
 
 
 def build_histogram_paged(
@@ -62,6 +65,7 @@ def build_histogram_paged(
     offset: int,
     count: int,
     n_bins: int,
+    node_map=None,
     impl: str = "auto",
 ):
     """Page-batched histogram: sum per-page level histograms over one stream pass.
@@ -71,6 +75,10 @@ def build_histogram_paged(
     matrix (possibly sharded — the per-page histogram then reduces across the
     mesh under jit). ``positions[page.index]`` holds that page's global tree
     positions; rows not at this level contribute to no node (-1).
+
+    With ``node_map``, ``count`` is the build-slot count and rows whose node is
+    in the derive set contribute to no bin — every page's scatter/contraction
+    only covers the smaller child of each split pair.
     """
     hist = None
     for page in stream:
@@ -84,6 +92,7 @@ def build_histogram_paged(
             level_pos,
             count,
             n_bins,
+            node_map=node_map,
             impl=impl,
         )
         hist = hp if hist is None else hist + hp
@@ -92,9 +101,7 @@ def build_histogram_paged(
 
 def bin_values(x, padded_edges, n_bins_per_feature, impl: str = "auto"):
     if _resolve(impl) == "pallas":
-        return _ellpack_bin.bin_values(
-            x, padded_edges, n_bins_per_feature, interpret=not _on_tpu()
-        )
+        return _ellpack_bin.bin_values(x, padded_edges, n_bins_per_feature)
     return _ref_bin_values(x, padded_edges, n_bins_per_feature)
 
 
@@ -103,8 +110,7 @@ def partition_rows(
 ):
     if _resolve(impl) == "pallas":
         return _partition.partition_rows(
-            bins, positions, feature, split_bin, default_left, is_leaf,
-            interpret=not _on_tpu(),
+            bins, positions, feature, split_bin, default_left, is_leaf
         )
     return _ref_partition_rows(bins, positions, feature, split_bin, default_left, is_leaf)
 

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels._backend import resolve_interpret
+
 MISSING_BIN = 255
 
 
@@ -67,8 +69,9 @@ def partition_rows(
     is_leaf: jax.Array,  # (n_nodes,) bool
     *,
     row_tile: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
+    interpret = resolve_interpret(interpret)
     n_rows, m = bins.shape
     n_nodes = feature.shape[0]
     r_pad = -n_rows % row_tile

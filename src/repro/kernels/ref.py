@@ -12,6 +12,18 @@ import jax.numpy as jnp
 MISSING_BIN = 255
 
 
+def apply_node_map(positions: jax.Array, node_map: jax.Array) -> jax.Array:
+    """Remap level-local node ids through ``node_map`` (histogram subtraction).
+
+    ``node_map[j]`` is the compacted build slot of level-local node ``j``, or
+    -1 for nodes whose histogram will be *derived* as ``parent - sibling``.
+    Rows at derive nodes (and already-inactive rows) come out -1 and therefore
+    contribute to no bin.
+    """
+    safe = jnp.clip(positions, 0, node_map.shape[0] - 1)
+    return jnp.where(positions >= 0, node_map[safe], -1).astype(jnp.int32)
+
+
 def build_histogram(
     bins: jax.Array,  # (n_rows, m) int32 local bin indices (MISSING_BIN = missing)
     g: jax.Array,  # (n_rows,) f32
@@ -19,15 +31,23 @@ def build_histogram(
     positions: jax.Array,  # (n_rows,) int32 level-local node index; < 0 = inactive
     n_nodes: int,
     n_bins: int,
+    node_map: jax.Array | None = None,  # (level_nodes,) int32 -> build slot or -1
 ) -> jax.Array:
     """Gradient histogram: out[n, f, b] = (sum g, sum h) over rows in node n with bin b.
 
     Missing values contribute to no bin (XGBoost semantics: the missing mass of
     a node is node_total - feature_total and is routed by the learned default
     direction at split evaluation time).
+
+    With ``node_map``, positions are first compacted through it and only the
+    ``n_nodes`` *build* slots are materialized — the scatter target (and on
+    TPU the VMEM out block) covers half the level at depth >= 1; siblings are
+    reconstructed by subtraction in `core.histcache`.
     """
     n_rows, m = bins.shape
     pos = positions.astype(jnp.int32)
+    if node_map is not None:
+        pos = apply_node_map(pos, node_map)
     active = pos >= 0
     valid = (bins != MISSING_BIN) & active[:, None]
     # flat scatter index: node * m * n_bins + f * n_bins + bin
