@@ -9,9 +9,16 @@ The out-of-core f=1.0 mode also runs with histogram subtraction disabled
 exact up to f32 accumulation order) while the default builds ~half the
 per-level node histograms — the derived column reports the built/derived
 ledger and the AUC delta.
+
+A ``lossguide`` (best-first / LightGBM-style) in-core mode rides along: at
+the full ``max_leaves = 2**max_depth`` budget it grows the same trees as
+depthwise (AUC delta pinned <= 5e-3 in the derived column), trading the
+per-level histogram pass for one pass per popped leaf. Override the growth
+axis from the CLI — see ``--grow-policy`` / ``--max-leaves`` in ``--help``.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 from benchmarks.common import (
@@ -29,7 +36,10 @@ from repro.data.pages import TransferStats
 
 
 def _params(
-    sampling: SamplingConfig | None = None, hist_subtraction: bool = True
+    sampling: SamplingConfig | None = None,
+    hist_subtraction: bool = True,
+    grow_policy: str = "depthwise",
+    max_leaves: int = 0,
 ) -> BoosterParams:
     return BoosterParams(
         n_estimators=N_TREES,
@@ -40,10 +50,16 @@ def _params(
         sampling=sampling or SamplingConfig(),
         seed=0,
         hist_subtraction=hist_subtraction,
+        grow_policy=grow_policy,
+        max_leaves=max_leaves,
     )
 
 
-def main(quick: bool = False) -> list[str]:
+def main(
+    quick: bool = False,
+    grow_policy: str = "lossguide",
+    lossguide_max_leaves: int | None = None,
+) -> list[str]:
     train_src, eval_src = higgs_sources()
     X, y = train_src.materialize()
     Xe, ye = eval_src.materialize()
@@ -77,6 +93,23 @@ def main(quick: bool = False) -> list[str]:
 
     record("gpu_in_core", lambda: (GradientBooster(_params()).fit(X, y), None))
 
+    # growth-policy comparison row (lossguide unless overridden via the CLI):
+    # best-first at the full leaf budget must track depthwise AUC (the trees
+    # are the same up to f32 ties)
+    n_leaves = 0
+    if grow_policy == "lossguide":
+        n_leaves = lossguide_max_leaves if lossguide_max_leaves else 2**MAX_DEPTH
+    policy_mode = f"gpu_in_core_{grow_policy}"
+    record(
+        policy_mode,
+        lambda: (
+            GradientBooster(
+                _params(grow_policy=grow_policy, max_leaves=n_leaves)
+            ).fit(X, y),
+            None,
+        ),
+    )
+
     def ooc(f: float | None, hist_subtraction: bool = True):
         stats = TransferStats()
         cfg = SamplingConfig(method="mvs", f=f) if f else SamplingConfig()
@@ -104,6 +137,19 @@ def main(quick: bool = False) -> list[str]:
         csv_row("table2_hist_subtraction_auc_delta", 0.0, f"auc_delta={auc_delta:.6f}")
     )
 
+    # the comparison row must learn the same model (acceptance bar: AUC within
+    # 5e-3 of depthwise; exact tree parity holds at the full lossguide budget)
+    lg_delta = abs(raw_auc[policy_mode] - raw_auc["gpu_in_core"])
+    results["grow_policy"] = {
+        "policy": grow_policy,
+        "max_leaves": n_leaves,
+        "auc_delta_vs_depthwise": round(lg_delta, 6),
+        "auc_match_5e-3": bool(lg_delta <= 5e-3),
+    }
+    out_rows.append(
+        csv_row(f"table2_{grow_policy}_auc_delta", 0.0, f"auc_delta={lg_delta:.6f}")
+    )
+
     results["paper_table2"] = {
         "gpu_in_core": {"seconds": 241.52, "auc": 0.8398},
         "gpu_out_of_core_f1.0": {"seconds": 211.91, "auc": 0.8396},
@@ -115,4 +161,33 @@ def main(quick: bool = False) -> list[str]:
 
 
 if __name__ == "__main__":
-    print("\n".join(main()))
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter
+    )
+    ap.add_argument("--quick", action="store_true", help="shrink the sampled-f sweep")
+    ap.add_argument(
+        "--grow-policy",
+        choices=["depthwise", "lossguide"],
+        default="lossguide",
+        help="growth policy of the extra benchmark row: 'lossguide' grows "
+        "best-first (gain-ordered frontier, LightGBM-style), 'depthwise' "
+        "level-by-level (paper Alg. 1). The standard Table-2 modes always "
+        "run depthwise; this flag only configures the comparison row.",
+    )
+    ap.add_argument(
+        "--max-leaves",
+        type=int,
+        default=0,
+        metavar="L",
+        help="leaf budget for the lossguide row; 0 (default) uses the full "
+        "2**max_depth budget, which must match depthwise AUC bit-for-bit up "
+        "to f32 ties. Smaller budgets trade accuracy for fewer splits.",
+    )
+    args = ap.parse_args()
+    if args.grow_policy == "depthwise" and args.max_leaves:
+        ap.error("--max-leaves only applies to --grow-policy=lossguide")
+    print("\n".join(main(
+        quick=args.quick,
+        grow_policy=args.grow_policy,
+        lossguide_max_leaves=args.max_leaves or None,
+    )))

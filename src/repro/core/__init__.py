@@ -22,10 +22,12 @@ from repro.core.tree import (
     TreeParams,
     grow_tree,
     grow_tree_generic,
+    grow_tree_lossguide_generic,
     predict_forest_raw,
     predict_tree_bins,
     predict_tree_raw,
     stack_trees,
+    tree_growth_driver,
 )
 
 __all__ = [
@@ -62,6 +64,8 @@ __all__ = [
     "TreeParams",
     "grow_tree",
     "grow_tree_generic",
+    "grow_tree_lossguide_generic",
+    "tree_growth_driver",
     "predict_forest_raw",
     "predict_tree_bins",
     "predict_tree_raw",

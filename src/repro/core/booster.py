@@ -53,6 +53,11 @@ class BoosterParams:
     # each split pair and derive the sibling as parent - built (see
     # core/histcache.py); False forces the full per-node build
     hist_subtraction: bool = True
+    # "depthwise" (paper Alg. 1) or "lossguide" (LightGBM-style best-first:
+    # gain-ordered frontier, up to max_leaves leaves, still depth-capped by
+    # max_depth); max_leaves=0 means up to the 2^max_depth complete tree
+    grow_policy: str = "depthwise"
+    max_leaves: int = 0
 
     def tree_params(self) -> TreeParams:
         return TreeParams(
@@ -63,6 +68,8 @@ class BoosterParams:
                 min_child_weight=self.min_child_weight,
             ),
             hist_subtraction=self.hist_subtraction,
+            grow_policy=self.grow_policy,
+            max_leaves=self.max_leaves,
         )
 
 

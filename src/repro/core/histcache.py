@@ -24,6 +24,25 @@ scatter work of every disk->host->device pass).
                              level (``derived = parent - built``), then cache
                              it for the next level
 
+Best-first (lossguide) growth uses the per-node sibling API instead: the
+frontier pops one leaf at a time, so histograms are cached per heap node id
+rather than per level:
+
+  put_node(node, hist)            retain one node's (m, n_bins, 2) histogram
+                                  while it sits on the frontier
+  plan_node(parent, child_counts) a 2-node `LevelPlan` for the popped
+                                  parent's children: build only the smaller
+                                  child (ties build left, same rule as the
+                                  level plan) and derive the sibling from the
+                                  cached parent histogram
+  expand_node(parent, plan, built)  reconstruct both children, cache them as
+                                  new frontier nodes, evict the parent
+  discard_node(node)              drop a node that left the frontier (became
+                                  a permanent leaf)
+
+At most one histogram per frontier leaf is retained, so the per-node cache
+holds <= max_leaves entries.
+
 The node choice uses exact row counts (`level_row_counts` over the positions
 produced by RepartitionInstances), so every builder — in-core, paged
 out-of-core, and distributed — makes identical build/derive decisions and the
@@ -104,12 +123,17 @@ class HistCacheStats:
         return self.total_rows / built if built else 1.0
 
 
-@functools.partial(jax.jit, static_argnames=("offset", "count"))
+@functools.partial(jax.jit, static_argnames=("count",))
 def level_row_counts(positions: Array, offset: int, count: int) -> Array:
-    """Rows per level-local node; frozen/out-of-level rows count nowhere."""
+    """Rows per window-local node; frozen/out-of-window rows count nowhere.
+
+    ``offset`` is traced (not static): best-first growth calls this with a
+    fresh 2-node window per popped leaf, and a static offset would recompile
+    on every pop.
+    """
     lp = positions.astype(jnp.int32) - offset
     valid = (positions >= offset) & (lp < count)
-    safe = jnp.where(valid, lp, count)  # overflow slot for non-level rows
+    safe = jnp.where(valid, lp, count)  # overflow slot for non-window rows
     return jnp.zeros(count + 1, jnp.int32).at[safe].add(1)[:count]
 
 
@@ -152,10 +176,14 @@ class HistogramCache:
         self.stats = HistCacheStats()
         self._prev: Array | None = None
         self._build_left: Array | None = None
+        self._node_hist: dict[int, Array] = {}  # heap node id -> (m, n_bins, 2)
+        self._node_build_left: Array | None = None
 
     def reset(self) -> None:
         self._prev = None
         self._build_left = None
+        self._node_hist.clear()
+        self._node_build_left = None
 
     def plan(self, count: int, level_counts: Array | None) -> LevelPlan:
         subtract = (
@@ -188,4 +216,56 @@ class HistogramCache:
             full = expand_level(self._prev, built, self._build_left)
         if self.enabled:
             self._prev = full
+        return full
+
+    # ------------------------------------------- per-node (best-first) API
+    def put_node(self, node: int, hist: Array) -> None:
+        """Retain one frontier node's (m, n_bins, 2) histogram."""
+        if self.enabled:
+            self._node_hist[node] = hist
+
+    def discard_node(self, node: int) -> None:
+        """Drop a node that left the frontier (became a permanent leaf)."""
+        self._node_hist.pop(node, None)
+
+    def plan_node(self, parent: int, child_counts: Array | None) -> LevelPlan:
+        """Build/derive plan for the popped ``parent``'s 2-node child window.
+
+        With subtraction on and the parent histogram cached, only the smaller
+        child (exact row counts from the per-node repartition; ties build
+        left, matching `plan_level`) occupies the single kernel slot and the
+        sibling is derived in `expand_node`. Otherwise both children build.
+        """
+        subtract = (
+            self.enabled
+            and parent in self._node_hist
+            and child_counts is not None
+        )
+        if not subtract:
+            self._node_build_left = None
+            return LevelPlan(node_map=None, n_build=2, count=2)
+        node_map, build_left = plan_level(2, child_counts)
+        self._node_build_left = build_left
+        self.stats.levels += 1
+        self.stats.built_nodes += 1
+        self.stats.derived_nodes += 1
+        built = jnp.minimum(child_counts[0], child_counts[1])
+        total = child_counts[0] + child_counts[1]
+        if not isinstance(built, jax.core.Tracer):
+            self.stats._add_rows(built, total)
+        return LevelPlan(node_map=node_map, n_build=1, count=2)
+
+    def expand_node(self, parent: int, plan: LevelPlan, built: Array) -> Array:
+        """Compact build -> full (2, m, n_bins, 2) child histograms; caches
+        both children as frontier nodes and evicts the parent."""
+        if plan.node_map is None:
+            full = built
+        else:
+            full = expand_level(
+                self._node_hist[parent][None], built, self._node_build_left
+            )
+        if self.enabled:
+            self._node_hist[2 * parent + 1] = full[0]
+            self._node_hist[2 * parent + 2] = full[1]
+            self.discard_node(parent)
         return full

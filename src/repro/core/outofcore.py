@@ -45,8 +45,8 @@ from repro.core.sampling import sample
 from repro.core.tree import (
     TreeBuildResult,
     grow_tree,
-    grow_tree_generic,
     predict_tree_bins,
+    tree_growth_driver,
 )
 from repro.data.pages import GLOBAL_STATS, PageStore, TransferStats
 from repro.kernels import ops
@@ -141,19 +141,22 @@ def build_tree_paged(
     impl: str = "auto",
     hist_cache: HistogramCache | None = None,
 ) -> tuple[object, dict[int, Array]]:
-    """Level-wise tree build over streamed pages (Alg. 6 core).
+    """Tree build over streamed pages (Alg. 6 core), either growth policy.
 
-    ``make_stream()`` starts one `PageStream` pass; one runs per level for the
-    histogram and one for the partition. Shared by the single-device
+    ``make_stream()`` starts one `PageStream` pass; the depthwise driver runs
+    one pass per level for the histogram and one for the partition, while the
+    lossguide driver (``tp.grow_policy == "lossguide"``) runs one pass per
+    popped frontier leaf — a per-node histogram pass in which every row
+    outside the popped node's 2-child window (including the whole derive set,
+    via the `node_map` kernel path) hits no bin. Shared by the single-device
     `ExternalGradientBooster` streaming path and the sharded
     `distributed.grow_tree_distributed_paged` (which differ only in how the
     stream stages pages). Returns (tree, per-page positions keyed by stream
     index, in `page_extents` order).
 
-    With histogram subtraction (the default) the per-level stream pass only
-    scatters rows belonging to *build* nodes — rows at derive-set nodes
-    contribute to no bin — so each disk->host->device pass does roughly half
-    the histogram work at depth >= 1.
+    With histogram subtraction (the default) the stream pass only scatters
+    rows belonging to *build* nodes — so each disk->host->device pass does
+    roughly half the histogram work at depth >= 1.
     """
     g_j, h_j = jnp.asarray(g), jnp.asarray(h)
     positions: dict[int, Array] = {
@@ -180,7 +183,7 @@ def build_tree_paged(
                 counts = c if counts is None else counts + c
         return counts
 
-    tree = grow_tree_generic(
+    tree = tree_growth_driver(tp)(
         hist_fn, partition_fn, jnp.sum(g_j), jnp.sum(h_j), n_bins, bin_valid,
         tp, cut_values, cut_ptrs, hist_cache=hist_cache,
     )

@@ -1,7 +1,8 @@
-"""Level-wise (depth-wise) GPU-style tree construction (paper Alg. 1).
+"""GPU-style tree construction: depth-wise (paper Alg. 1) and best-first.
 
 Trees use a complete-binary-tree array layout (node i -> children 2i+1, 2i+2,
-n_total = 2^(max_depth+1) - 1) so every step is static-shaped and jit-able:
+n_total = 2^(effective_max_depth+1) - 1) so every step is static-shaped and
+jit-able:
 
   level d:  histogram over *build* nodes  (kernels.ops.build_histogram)
             -> sibling derivation         (core.histcache: parent - built)
@@ -14,10 +15,16 @@ accumulation and row repartition — so the same driver serves:
   * the out-of-core streaming builder (page loop per level, Alg. 6),
   * the distributed paged builder (sharded staging + per-page mesh reduce).
 
-A `HistogramCache` sits between the driver and the callbacks: per level it
-plans which nodes must actually be built (the smaller child of each split
-pair) and derives every sibling by subtraction from the cached parent level —
-see `core/histcache.py`. Disable per tree with
+`grow_tree_lossguide_generic` is the best-first (LightGBM lossguide) sibling
+over the same two callbacks: a gain-ordered frontier pops one leaf at a time,
+expands it via per-node 2-wide `LevelPlan`s, and repartitions only that
+node's rows. Select with ``TreeParams(grow_policy="lossguide",
+max_leaves=...)``; every builder dispatches through `tree_growth_driver`.
+
+A `HistogramCache` sits between the driver and the callbacks: per level (or
+per popped node) it plans which nodes must actually be built (the smaller
+child of each split pair) and derives every sibling by subtraction from the
+cached parent — see `core/histcache.py`. Disable per tree with
 ``TreeParams(hist_subtraction=False)`` to force the full build.
 
 Rows carry a global node-id position; once their node becomes a leaf the
@@ -27,6 +34,7 @@ prediction for every training row (a single gather for the margin update).
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Callable, NamedTuple
 
 import jax
@@ -59,6 +67,9 @@ class TreeArrays(NamedTuple):
         return int(np.log2(self.n_total + 1)) - 1
 
 
+GROW_POLICIES = ("depthwise", "lossguide")
+
+
 @dataclasses.dataclass(frozen=True)
 class TreeParams:
     max_depth: int = 6
@@ -66,10 +77,44 @@ class TreeParams:
     # build only the smaller child of each split pair per level and derive the
     # sibling histogram as parent - built (exact up to f32 accumulation order)
     hist_subtraction: bool = True
+    # "depthwise": expand every growable node level by level (paper Alg. 1);
+    # "lossguide": best-first — a gain-ordered frontier pops the single best
+    # candidate leaf, LightGBM-style (`grow_tree_lossguide_generic`)
+    grow_policy: str = "depthwise"
+    # lossguide leaf budget; 0 = unbounded (up to the 2^max_depth complete
+    # tree). Ignored by depthwise (XGBoost semantics for grow_policy).
+    max_leaves: int = 0
+
+    def __post_init__(self) -> None:
+        if self.grow_policy not in GROW_POLICIES:
+            raise ValueError(
+                f"grow_policy must be one of {GROW_POLICIES}, got {self.grow_policy!r}"
+            )
+        if self.max_leaves < 0:
+            raise ValueError(f"max_leaves must be >= 0, got {self.max_leaves}")
+
+    @property
+    def effective_max_depth(self) -> int:
+        """Deepest level any node can reach. A lossguide tree with L leaves
+        makes L - 1 splits, so no node can sit deeper than min(max_depth,
+        max_leaves - 1) — the node arrays shrink accordingly (a
+        ``max_leaves=8`` tree never needs a depth-30 heap)."""
+        if self.grow_policy == "lossguide" and self.max_leaves:
+            return min(self.max_depth, max(self.max_leaves - 1, 0))
+        return self.max_depth
 
     @property
     def n_total_nodes(self) -> int:
-        return 2 ** (self.max_depth + 1) - 1
+        """Heap-array capacity: complete tree over the *effective* depth."""
+        return 2 ** (self.effective_max_depth + 1) - 1
+
+    @property
+    def leaf_budget(self) -> int:
+        """Max leaves a built tree may have (both policies)."""
+        full = 2**self.effective_max_depth
+        if self.grow_policy == "lossguide" and self.max_leaves:
+            return min(self.max_leaves, full)
+        return full
 
 
 class TreeBuildResult(NamedTuple):
@@ -79,8 +124,11 @@ class TreeBuildResult(NamedTuple):
 
 # HistFn(offset, count, plan) -> (plan.n_build, m, n_bins, 2)
 #
-# ``offset``/``count`` locate the level in the complete-tree layout (global
-# node ids [offset, offset + count)). ``plan`` is the level's `LevelPlan`:
+# ``offset``/``count`` locate the node *window* in the complete-tree layout
+# (global node ids [offset, offset + count)): a whole level for the depthwise
+# driver, the popped node's 2-child window for the lossguide driver. Rows
+# positioned outside the window contribute to no bin. ``plan`` is the window's
+# `LevelPlan`:
 # when ``plan.node_map`` is None the driver wants the full level histogram
 # (all ``count`` nodes, plan.n_build == count); otherwise the driver receives
 # only the *build subset* — implementations must route each row's level-local
@@ -94,12 +142,15 @@ HistFn = Callable[[int, int, LevelPlan], Array]
 # PartitionFn(feature, split_bin, default_left, is_leaf, count_level)
 #   -> (next_count,) int32 row counts per next-level node, or None
 #
-# Repartitions every live row to its child node. ``count_level`` is None when
-# the driver has no use for row counts (subtraction off, or no histogram
-# follows); otherwise it is the next level's ``(offset, count)`` node extent
-# and the implementation must return that level's per-node row counts (summed
-# across pages/shards — use `core.histcache.level_row_counts`) so the cache
-# can put the smaller child of each pair in the build set.
+# Repartitions every live row to its child node (rows at leaves stay frozen,
+# which is also what makes the lossguide driver's per-node repartition work:
+# after one pop only the popped node is non-leaf). ``count_level`` is None
+# when the driver has no use for row counts (subtraction off, or no histogram
+# follows); otherwise it is the next window's ``(offset, count)`` node extent
+# — the next level, or the freshly split node's 2-child window — and the
+# implementation must return that window's per-node row counts (summed across
+# pages/shards — use `core.histcache.level_row_counts`) so the cache can put
+# the smaller child of each pair in the build set.
 PartitionFn = Callable[
     [Array, Array, Array, Array, "tuple[int, int] | None"], Array | None
 ]
@@ -195,14 +246,7 @@ def grow_tree_generic(
     leaf_value = leaf_value.at[idx].set(jnp.where(growable, w, leaf_value[idx]))
     is_leaf = is_leaf.at[idx].set(True)
 
-    # raw split thresholds for prediction on unquantized features
-    if cut_values is not None and cut_ptrs is not None:
-        cut_values_j = jnp.asarray(cut_values)
-        cut_ptrs_j = jnp.asarray(cut_ptrs)
-        split_value = cut_values_j[cut_ptrs_j[feature] + split_bin]
-    else:
-        split_value = jnp.zeros(n_total, jnp.float32)
-    split_value = jnp.where(is_leaf, 0.0, split_value)
+    split_value = _finalize_split_values(feature, split_bin, is_leaf, cut_values, cut_ptrs)
 
     return TreeArrays(
         feature=feature,
@@ -212,6 +256,170 @@ def grow_tree_generic(
         is_leaf=is_leaf,
         leaf_value=leaf_value,
     )
+
+
+class _SplitCandidate(NamedTuple):
+    """Frontier entry: one growable leaf's best split, pulled to host scalars
+    (best-first ordering is inherently host-driven control flow)."""
+
+    feature: int
+    split_bin: int
+    default_left: bool
+    left_g: float
+    left_h: float
+    right_g: float
+    right_h: float
+
+
+def _finalize_split_values(
+    feature: Array,
+    split_bin: Array,
+    is_leaf: Array,
+    cut_values: np.ndarray | None,
+    cut_ptrs: np.ndarray | None,
+) -> Array:
+    """Raw thresholds for prediction on unquantized features (0 at leaves)."""
+    if cut_values is not None and cut_ptrs is not None:
+        cut_values_j = jnp.asarray(cut_values)
+        cut_ptrs_j = jnp.asarray(cut_ptrs)
+        split_value = cut_values_j[cut_ptrs_j[feature] + split_bin]
+    else:
+        split_value = jnp.zeros(feature.shape[0], jnp.float32)
+    return jnp.where(is_leaf, 0.0, split_value)
+
+
+def grow_tree_lossguide_generic(
+    hist_fn: HistFn,
+    partition_fn: PartitionFn,
+    total_g: Array,
+    total_h: Array,
+    n_bins: int,
+    bin_valid: Array,  # (m, n_bins) bool
+    params: TreeParams,
+    cut_values: np.ndarray | None = None,
+    cut_ptrs: np.ndarray | None = None,
+    hist_cache: HistogramCache | None = None,
+) -> TreeArrays:
+    """Best-first (loss-guided, LightGBM-style) growth over the same
+    HistFn/PartitionFn contracts as `grow_tree_generic`.
+
+    A gain-ordered frontier pops the single best candidate leaf and expands
+    only it: the split is written into the heap-layout arrays, one
+    PartitionFn call repartitions the popped node's rows (every other node is
+    still a leaf, so its rows stay frozen — per-node repartition falls out of
+    the existing kernel semantics), and one HistFn pass over the 2-node child
+    window builds the children's histograms. With subtraction on, the pass
+    builds only the smaller child (a per-node `LevelPlan` from
+    `HistogramCache.plan_node`) and the sibling is derived from the cached
+    parent histogram. Trees stay in the complete-heap array layout, so
+    prediction and serialization are unchanged for the resulting non-complete
+    trees.
+
+    With ``max_leaves >= 2**effective_max_depth`` and untied gains this
+    reproduces the depthwise tree exactly (every positive-gain candidate is
+    eventually popped); smaller budgets keep only the highest-gain splits.
+    """
+    n_total = params.n_total_nodes
+    eff_depth = params.effective_max_depth
+    max_leaves = params.leaf_budget
+    cache = hist_cache if hist_cache is not None else HistogramCache(
+        enabled=params.hist_subtraction
+    )
+    cache.reset()
+
+    feature = jnp.zeros(n_total, jnp.int32)
+    split_bin = jnp.zeros(n_total, jnp.int32)
+    default_left = jnp.zeros(n_total, bool)
+    is_leaf = jnp.ones(n_total, bool)
+    node_g = jnp.zeros(n_total, jnp.float32).at[0].set(total_g)
+    node_h = jnp.zeros(n_total, jnp.float32).at[0].set(total_h)
+
+    # heap entries (-gain, node, candidate): max-gain first, node id breaks
+    # exact gain ties deterministically (heap order matching depthwise's
+    # left-to-right sweep)
+    frontier: list[tuple[float, int, _SplitCandidate]] = []
+
+    def push_candidates(offset: int, hist: Array, ng: Array, nh: Array) -> None:
+        splits: LevelSplits = evaluate_splits(hist, ng, nh, bin_valid, params.split)
+        gain = np.asarray(splits.gain)
+        should = np.asarray(splits.should_split)
+        feat = np.asarray(splits.feature)
+        sbin = np.asarray(splits.split_bin)
+        dleft = np.asarray(splits.default_left)
+        lg, lh = np.asarray(splits.left_g), np.asarray(splits.left_h)
+        rg, rh = np.asarray(splits.right_g), np.asarray(splits.right_h)
+        for j in range(hist.shape[0]):
+            node = offset + j
+            if bool(should[j]):
+                cand = _SplitCandidate(
+                    int(feat[j]), int(sbin[j]), bool(dleft[j]),
+                    float(lg[j]), float(lh[j]), float(rg[j]), float(rh[j]),
+                )
+                heapq.heappush(frontier, (-float(gain[j]), node, cand))
+            else:
+                cache.discard_node(node)  # permanent leaf
+
+    n_leaves = 1
+    if eff_depth >= 1 and max_leaves >= 2:
+        root_hist = hist_fn(0, 1, LevelPlan(node_map=None, n_build=1, count=1))
+        cache.put_node(0, root_hist[0])
+        push_candidates(0, root_hist, node_g[:1], node_h[:1])
+
+    while frontier and n_leaves < max_leaves:
+        _, node, cand = heapq.heappop(frontier)
+        left, right = 2 * node + 1, 2 * node + 2
+        feature = feature.at[node].set(cand.feature)
+        split_bin = split_bin.at[node].set(cand.split_bin)
+        default_left = default_left.at[node].set(cand.default_left)
+        is_leaf = is_leaf.at[node].set(False)
+        node_g = node_g.at[left].set(cand.left_g)
+        node_h = node_h.at[left].set(cand.left_h)
+        node_g = node_g.at[right].set(cand.right_g)
+        node_h = node_h.at[right].set(cand.right_h)
+        n_leaves += 1
+
+        # children sit at depth(node) + 1 == (node+1).bit_length(); they can
+        # only split if their own children would still fit under eff_depth
+        expandable = (node + 1).bit_length() < eff_depth and n_leaves < max_leaves
+        # per-node repartition: only the popped node's rows move (all other
+        # nodes are leaves, so their rows stay frozen); the child row counts
+        # feed the build/derive choice
+        count_window = (left, 2) if (expandable and cache.enabled) else None
+        counts = partition_fn(feature, split_bin, default_left, is_leaf, count_window)
+        if expandable:
+            plan = cache.plan_node(node, counts)
+            built = hist_fn(left, 2, plan)
+            child_hist = cache.expand_node(node, plan, built)
+            push_candidates(left, child_hist, node_g[left:right + 1], node_h[left:right + 1])
+        else:
+            cache.discard_node(node)
+
+    # budget exhausted: pending frontier nodes stay leaves
+    for _, node, _ in frontier:
+        cache.discard_node(node)
+
+    # every reachable leaf gets its eq.-(6) weight; unreachable heap slots
+    # have node_g == node_h == 0 so their weight is exactly 0
+    w = leaf_weight(node_g, node_h, params.split.reg_lambda)
+    leaf_value = jnp.where(is_leaf, w, 0.0)
+    split_value = _finalize_split_values(feature, split_bin, is_leaf, cut_values, cut_ptrs)
+
+    return TreeArrays(
+        feature=feature,
+        split_bin=split_bin,
+        split_value=split_value,
+        default_left=default_left,
+        is_leaf=is_leaf,
+        leaf_value=leaf_value,
+    )
+
+
+def tree_growth_driver(params: TreeParams):
+    """The generic driver for ``params.grow_policy`` — both drivers share the
+    HistFn/PartitionFn contracts, so every builder dispatches through here."""
+    if params.grow_policy == "lossguide":
+        return grow_tree_lossguide_generic
+    return grow_tree_generic
 
 
 def grow_tree(
@@ -226,12 +434,18 @@ def grow_tree(
     impl: str = "auto",
     hist_cache: HistogramCache | None = None,
 ) -> TreeBuildResult:
-    """In-core builder (paper Alg. 1): one device-resident ELLPACK page."""
+    """In-core builder (paper Alg. 1; best-first when
+    ``params.grow_policy == "lossguide"``): one device-resident ELLPACK page."""
     n_rows = bins.shape[0]
     pos_box = [jnp.zeros(n_rows, jnp.int32)]
 
     def hist_fn(offset: int, count: int, plan: LevelPlan) -> Array:
-        level_pos = jnp.where(pos_box[0] >= offset, pos_box[0] - offset, -1)
+        pos = pos_box[0]
+        # rows outside [offset, offset + plan.count) — frozen at shallower
+        # leaves, or live at other heap nodes during a per-node pass — hit no bin
+        level_pos = jnp.where(
+            (pos >= offset) & (pos < offset + plan.count), pos - offset, -1
+        )
         return ops.build_histogram(
             bins, g, h, level_pos, plan.n_build, n_bins,
             node_map=plan.node_map, impl=impl,
@@ -245,7 +459,7 @@ def grow_tree(
             return None
         return level_row_counts(pos_box[0], *count_level)
 
-    tree = grow_tree_generic(
+    tree = tree_growth_driver(params)(
         hist_fn,
         partition_fn,
         jnp.sum(g),

@@ -33,6 +33,12 @@ stream through `repro.pipeline.PageStream` with a *sharded* device put, so
 each staged page lands row-sharded over the data axes and the per-page
 histogram reduces across the mesh under jit — the paper's §2.2 AllReduce
 composed with its §2.3 paging.
+
+Growth policy: `DistConfig(grow_policy="lossguide", max_leaves=...)` (or the
+same fields on `TreeParams`) switches `grow_tree_distributed` /
+`grow_tree_distributed_paged` to host-driven best-first growth — see
+`_grow_tree_distributed_lossguide`; `make_gbdt_step_fn` stays depthwise-only
+because its whole boosting step is one closed SPMD program.
 """
 from __future__ import annotations
 
@@ -45,9 +51,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.histcache import expand_level, level_row_counts, plan_level
+from repro.core.histcache import (
+    HistogramCache,
+    expand_level,
+    level_row_counts,
+    plan_level,
+)
 from repro.core.split import evaluate_splits, leaf_weight
-from repro.core.tree import TreeArrays, TreeParams
+from repro.core.tree import TreeArrays, TreeParams, grow_tree_lossguide_generic
 from repro.kernels import ops, ref
 
 Array = jax.Array
@@ -69,10 +80,25 @@ class DistConfig:
     hist_dtype: str = "float32"  # "bfloat16" -> compressed histogram psum
     kernel_impl: str = "auto"
     hist_subtraction: bool = True  # psum only the built half, derive siblings
+    # growth-policy override: None inherits from TreeParams; "lossguide"
+    # switches to the host-driven best-first build (see
+    # `_grow_tree_distributed_lossguide`); max_leaves likewise overrides the
+    # TreeParams leaf budget when set
+    grow_policy: str | None = None
+    max_leaves: int | None = None
 
     @property
     def all_axes(self) -> tuple[str, ...]:
         return self.data_axes + ((self.feature_axis,) if self.feature_axis else ())
+
+    def resolve_tree_params(self, tp: TreeParams) -> TreeParams:
+        """TreeParams with this config's grow_policy/max_leaves overrides."""
+        kw = {}
+        if self.grow_policy is not None:
+            kw["grow_policy"] = self.grow_policy
+        if self.max_leaves is not None:
+            kw["max_leaves"] = self.max_leaves
+        return dataclasses.replace(tp, **kw) if kw else tp
 
 
 def _psum_hist(hist: Array, cfg: DistConfig) -> Array:
@@ -270,6 +296,105 @@ def _grow_tree_local(
     return tree, positions
 
 
+def _grow_tree_distributed_lossguide(
+    mesh: Mesh,
+    bins: Array,
+    g: Array,
+    h: Array,
+    n_bins: int,
+    bin_valid: Array,
+    tp: TreeParams,
+    cfg: DistConfig,
+    cut_values=None,
+    cut_ptrs=None,
+) -> tuple[TreeArrays, Array]:
+    """Best-first distributed build: host-driven frontier over shard_map'd
+    per-pass kernels.
+
+    Best-first growth is inherently host-driven (the next node to expand
+    depends on data), so unlike `_grow_tree_local` the frontier loop cannot
+    live inside one shard_map program. Instead each per-node pass is its own
+    jit'd SPMD step: every shard builds its local histogram for the popped
+    node's 2-child window and the psum carries ONLY the built slots — one
+    (1, m, n_bins, 2) payload per pop with subtraction on, half the depthwise
+    per-pair payload — while the sibling is derived host-side from the cached
+    parent. Row counts psum once per pop to keep the build/derive choice
+    identical on every shard (and to the single-device builder's).
+    """
+    if cfg.feature_axis is not None:
+        raise NotImplementedError(
+            "lossguide growth composes with row sharding only; feature-parallel "
+            "split search is depthwise-only"
+        )
+    bins_spec = P(cfg.data_axes, None)
+    vec_spec = P(cfg.data_axes)
+    rep = P()
+    g_j, h_j = jnp.asarray(g), jnp.asarray(h)
+    pos_box = [jnp.zeros(bins.shape[0], jnp.int32)]
+    step_cache: dict[tuple[int, int], Callable] = {}
+
+    def hist_step(window: int, n_build: int) -> Callable:
+        # one compiled SPMD step per (window, n_build) in {(1,1),(2,1),(2,2)};
+        # offset is traced so pops at different heap nodes share the program
+        if (window, n_build) not in step_cache:
+
+            def body(bins_l, g_l, h_l, pos_l, node_map, offset):
+                lp = jnp.where(
+                    (pos_l >= offset) & (pos_l < offset + window), pos_l - offset, -1
+                )
+                built = ops.build_histogram(
+                    bins_l, g_l, h_l, lp, n_build, n_bins,
+                    node_map=node_map, impl=cfg.kernel_impl,
+                )
+                return _psum_hist(built, cfg)  # AllReduce of built slots only
+
+            fn = _shard_map(
+                body, mesh=mesh,
+                in_specs=(bins_spec, vec_spec, vec_spec, vec_spec, rep, rep),
+                out_specs=rep,
+            )
+            step_cache[(window, n_build)] = jax.jit(fn)
+        return step_cache[(window, n_build)]
+
+    def part_body(bins_l, pos_l, feature, split_bin, default_left, is_leaf, offset):
+        new_pos = ops.partition_rows(
+            bins_l, pos_l, feature, split_bin, default_left, is_leaf,
+            impl=cfg.kernel_impl,
+        )
+        counts = jax.lax.psum(level_row_counts(new_pos, offset, 2), cfg.data_axes)
+        return new_pos, counts
+
+    part_step = jax.jit(_shard_map(
+        part_body, mesh=mesh,
+        in_specs=(bins_spec, vec_spec, rep, rep, rep, rep, rep),
+        out_specs=(vec_spec, rep),
+    ))
+
+    def hist_fn(offset, count, plan):
+        node_map = (
+            jnp.arange(plan.count, dtype=jnp.int32)  # full build: identity map
+            if plan.node_map is None
+            else plan.node_map
+        )
+        step = hist_step(plan.count, plan.n_build)
+        return step(bins, g_j, h_j, pos_box[0], node_map, jnp.int32(offset))
+
+    def partition_fn(feature, split_bin, default_left, is_leaf, count_level):
+        offset = count_level[0] if count_level is not None else 0
+        pos_box[0], counts = part_step(
+            bins, pos_box[0], feature, split_bin, default_left, is_leaf,
+            jnp.int32(offset),
+        )
+        return counts if count_level is not None else None
+
+    cache = HistogramCache(enabled=cfg.hist_subtraction and tp.hist_subtraction)
+    tree = grow_tree_lossguide_generic(
+        hist_fn, partition_fn, jnp.sum(g_j), jnp.sum(h_j), n_bins, bin_valid,
+        tp, cut_values, cut_ptrs, hist_cache=cache,
+    )
+    return tree, pos_box[0]
+
+
 def make_gbdt_step_fn(
     mesh: Mesh,
     tp: TreeParams,
@@ -284,9 +409,21 @@ def make_gbdt_step_fn(
     margin -> (g, h) -> MVS-style gradient masking -> distributed tree build
     -> margin update. Used by the distributed trainer and the multi-pod
     dry-run (this is the paper technique's "train_step").
+
+    Depthwise only: best-first growth is host-driven control flow and cannot
+    be closed over by one SPMD program — use `grow_tree_distributed` /
+    `grow_tree_distributed_paged` with ``grow_policy="lossguide"`` instead.
     """
     from repro.core.objectives import get_objective
     from repro.core.sampling import SamplingConfig, sample
+
+    tp = cfg.resolve_tree_params(tp)
+    if tp.grow_policy == "lossguide":
+        raise NotImplementedError(
+            "make_gbdt_step_fn compiles the whole boosting step into one SPMD "
+            "program; lossguide growth is host-driven — build trees with "
+            "grow_tree_distributed or grow_tree_distributed_paged instead"
+        )
 
     obj = get_objective(objective)
     row_spec = P(cfg.data_axes, cfg.feature_axis)
@@ -337,6 +474,11 @@ def grow_tree_distributed(
     cut_ptrs=None,
 ):
     """Build one tree with rows/features sharded over the mesh."""
+    tp = cfg.resolve_tree_params(tp)
+    if tp.grow_policy == "lossguide":
+        return _grow_tree_distributed_lossguide(
+            mesh, bins, g, h, n_bins, bin_valid, tp, cfg, cut_values, cut_ptrs
+        )
     row_spec = P(cfg.data_axes, cfg.feature_axis)
     vec_spec = P(cfg.data_axes)
     rep = P()
@@ -394,11 +536,13 @@ def grow_tree_distributed_paged(
     single-device one: `core.outofcore.build_tree_paged`, with mesh placement
     supplied entirely by the stream's put. Histogram subtraction (on unless
     either `cfg` or `tp` disables it) shrinks every per-page histogram pass to
-    the build half of the level.
+    the build half of the level. With ``grow_policy="lossguide"`` (from `cfg`
+    or `tp`) the paged build runs best-first: one stream pass per popped leaf,
+    each page's scatter covering only the popped node's built child.
     """
-    from repro.core.histcache import HistogramCache
     from repro.core.outofcore import build_tree_paged
 
+    tp = cfg.resolve_tree_params(tp)
     cache = HistogramCache(enabled=cfg.hist_subtraction and tp.hist_subtraction)
     tree, positions = build_tree_paged(
         make_stream, list(page_extents), g, h, n_bins, bin_valid, tp,

@@ -79,12 +79,18 @@ def build_histogram_paged(
     With ``node_map``, ``count`` is the build-slot count and rows whose node is
     in the derive set contribute to no bin — every page's scatter/contraction
     only covers the smaller child of each split pair.
+
+    The node window is ``[offset, offset + window)`` where ``window`` is the
+    node_map length (or ``count`` for a full build). Rows outside it — frozen
+    at shallower leaves, or live at *other* heap nodes during a best-first
+    per-node pass — contribute to no bin.
     """
+    window = node_map.shape[0] if node_map is not None else count
     hist = None
     for page in stream:
         ro, nr = page.host.row_offset, page.host.n_rows
         pos = positions[page.index]
-        level_pos = jnp.where(pos >= offset, pos - offset, -1)
+        level_pos = jnp.where((pos >= offset) & (pos < offset + window), pos - offset, -1)
         hp = build_histogram(
             page.device,
             jax.lax.dynamic_slice(g, (ro,), (nr,)),

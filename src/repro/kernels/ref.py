@@ -13,15 +13,18 @@ MISSING_BIN = 255
 
 
 def apply_node_map(positions: jax.Array, node_map: jax.Array) -> jax.Array:
-    """Remap level-local node ids through ``node_map`` (histogram subtraction).
+    """Remap window-local node ids through ``node_map`` (histogram subtraction).
 
-    ``node_map[j]`` is the compacted build slot of level-local node ``j``, or
+    ``node_map[j]`` is the compacted build slot of window-local node ``j``, or
     -1 for nodes whose histogram will be *derived* as ``parent - sibling``.
-    Rows at derive nodes (and already-inactive rows) come out -1 and therefore
+    Rows at derive nodes, already-inactive rows, and rows whose position falls
+    outside the window entirely (best-first growth keeps live rows at heap
+    nodes far from the pass's 2-node window) come out -1 and therefore
     contribute to no bin.
     """
+    in_window = (positions >= 0) & (positions < node_map.shape[0])
     safe = jnp.clip(positions, 0, node_map.shape[0] - 1)
-    return jnp.where(positions >= 0, node_map[safe], -1).astype(jnp.int32)
+    return jnp.where(in_window, node_map[safe], -1).astype(jnp.int32)
 
 
 def build_histogram(
@@ -48,7 +51,9 @@ def build_histogram(
     pos = positions.astype(jnp.int32)
     if node_map is not None:
         pos = apply_node_map(pos, node_map)
-    active = pos >= 0
+    # rows past the scatter target (per-node passes see live rows at other
+    # heap nodes) must be dropped explicitly, not left to OOB-scatter behavior
+    active = (pos >= 0) & (pos < n_nodes)
     valid = (bins != MISSING_BIN) & active[:, None]
     # flat scatter index: node * m * n_bins + f * n_bins + bin
     feat = jax.lax.broadcasted_iota(jnp.int32, (n_rows, m), 1)

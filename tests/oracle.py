@@ -1,0 +1,86 @@
+"""Shared structural tree-equality oracle for the builder test suites.
+
+Histogram subtraction, paged builds, distributed psums, and best-first
+growth are all exact only up to f32 accumulation order, so exact-tie
+argmaxes (empty bins between two equal-gain thresholds, zero-missing-mass
+default directions) may break differently between two builders that are
+semantically identical. `assert_trees_equal` therefore pins the *semantic*
+tree: identical structure, identical routing of every training row (when
+positions are given), ~all raw splits identical (ties are rare), and leaf
+weights within float tolerance.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def assert_trees_equal(
+    got,
+    want,
+    *,
+    got_positions=None,
+    want_positions=None,
+    min_split_agreement: float = 0.95,
+    leaf_rtol: float = 1e-4,
+    leaf_atol: float = 1e-5,
+    exact: bool = False,
+) -> None:
+    """Structural equality of two `TreeArrays` with f32-tie tolerance.
+
+    Checks, in order: same heap capacity, identical leaf structure, identical
+    per-row routing (if positions are supplied), split (feature, bin)
+    agreement on at least ``min_split_agreement`` of nodes (1.0 when
+    ``exact``), and leaf values within ``leaf_rtol``/``leaf_atol``.
+    """
+    got_leaf = np.asarray(got.is_leaf)
+    want_leaf = np.asarray(want.is_leaf)
+    assert got_leaf.shape == want_leaf.shape, (
+        f"heap capacity differs: {got_leaf.shape} vs {want_leaf.shape}"
+    )
+    np.testing.assert_array_equal(
+        got_leaf, want_leaf, err_msg="tree structure (is_leaf) differs"
+    )
+    if (got_positions is None) != (want_positions is None):
+        raise AssertionError("pass both got_positions and want_positions, or neither")
+    if got_positions is not None:
+        np.testing.assert_array_equal(
+            np.asarray(got_positions),
+            np.asarray(want_positions),
+            err_msg="row -> leaf routing differs",
+        )
+    same_split = (
+        (np.asarray(got.feature) == np.asarray(want.feature))
+        & (np.asarray(got.split_bin) == np.asarray(want.split_bin))
+    )
+    floor = 1.0 if exact else min_split_agreement
+    assert same_split.mean() >= floor, (
+        f"{(~same_split).sum()} of {same_split.size} split(s) flipped "
+        f"(agreement {same_split.mean():.3f} < {floor})"
+    )
+    np.testing.assert_allclose(
+        np.asarray(got.leaf_value),
+        np.asarray(want.leaf_value),
+        rtol=leaf_rtol,
+        atol=leaf_atol,
+        err_msg="leaf values differ beyond f32 tolerance",
+    )
+
+
+def assert_positions_are_leaves(tree, positions) -> None:
+    """Every training row's final position must be a leaf of ``tree``."""
+    leaves = np.asarray(tree.is_leaf)
+    pos = np.asarray(positions)
+    assert np.all(pos >= 0), "retired (-1) positions after a full build"
+    assert np.all(leaves[pos]), "some rows ended at internal nodes"
+
+
+def assert_forests_equal(got_trees, want_trees, **kwargs) -> None:
+    """Pairwise `assert_trees_equal` over two same-length forests."""
+    assert len(got_trees) == len(want_trees), (
+        f"forest sizes differ: {len(got_trees)} vs {len(want_trees)}"
+    )
+    for i, (gt, wt) in enumerate(zip(got_trees, want_trees)):
+        try:
+            assert_trees_equal(gt, wt, **kwargs)
+        except AssertionError as e:
+            raise AssertionError(f"tree {i}: {e}") from e

@@ -75,6 +75,18 @@ assert bool(jnp.all(res.tree.split_bin == tree_p.split_bin))
 assert float(jnp.abs(res.tree.leaf_value - tree_p.leaf_value).max()) < 1e-5
 assert bool(jnp.all(res.positions == pos_p))
 
+# ---- lossguide (best-first) build: host-driven frontier, per-pop psum of
+# only the built child slot; must match the single-device lossguide tree ----
+tp_lg = TreeParams(max_depth=4, grow_policy="lossguide", max_leaves=16)
+res_lg = grow_tree(bins, g, h, 16, bv, tp_lg, ell.cuts.values, ell.cuts.ptrs)
+cfg_lg = DistConfig(data_axes=("data",), grow_policy="lossguide", max_leaves=16)
+tree_lg, pos_lg = grow_tree_distributed(mesh, bins, g, h, 16, bv, tp, cfg_lg,
+                                        ell.cuts.values, ell.cuts.ptrs)
+assert bool(jnp.all(res_lg.tree.feature == tree_lg.feature))
+assert bool(jnp.all(res_lg.tree.is_leaf == tree_lg.is_leaf))
+assert float(jnp.abs(res_lg.tree.leaf_value - tree_lg.leaf_value).max()) < 1e-5
+assert bool(jnp.all(res_lg.positions == pos_lg))
+
 # ---- full boosting step fn (dry-run target) executes and reduces loss ----
 step = make_gbdt_step_fn(mesh, tp, 16, cfg, learning_rate=0.3,
                          objective="binary:logistic", sampling_f=0.5)

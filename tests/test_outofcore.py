@@ -1,6 +1,7 @@
 """Out-of-core executor (Alg. 3/5/6/7): equivalence, sampling, restart, disk paging."""
 import numpy as np
 import pytest
+from oracle import assert_forests_equal
 
 from repro.core import BoosterParams, ExternalGradientBooster, GradientBooster, SamplingConfig
 from repro.core.objectives import auc
@@ -33,6 +34,8 @@ def test_streaming_equivalent_to_in_core(source, arrays):
     b_ooc = ExternalGradientBooster(BoosterParams(seed=0, **PARAMS), page_bytes=8 * 1024)
     b_ooc.fit(source)
     assert b_ooc.pages.n_pages > 1  # actually paged
+    # tree-by-tree structural equality (shared oracle), not just final margins
+    assert_forests_equal(b_ooc.trees, b_in.trees)
     np.testing.assert_allclose(
         b_in.predict_margin(X), b_ooc.predict_margin(X), rtol=1e-4, atol=1e-5
     )

@@ -5,6 +5,7 @@ import time
 import jax
 import numpy as np
 import pytest
+from oracle import assert_trees_equal
 
 from repro.data.pages import PageStore, TransferStats
 from repro.pipeline import DevicePageCache, PageStream
@@ -175,6 +176,134 @@ def source_small():
     return SyntheticSource(n_rows=600, num_features=12, batch_rows=128, task="higgs", seed=9)
 
 
+# ------------------------- edge cases the per-node (lossguide) passes hit --
+
+def _edge_case_fixture(n=257, m=4, max_bin=8, seed=13):
+    import jax.numpy as jnp
+
+    from repro.core.booster import bin_valid_from_cuts
+    from repro.core.ellpack import create_ellpack_inmemory
+
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, m)).astype(np.float32)
+    g = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    h = jnp.asarray(rng.random(n).astype(np.float32) + 0.1)
+    ell = create_ellpack_inmemory(X, max_bin=max_bin)
+    bv = bin_valid_from_cuts(ell.cuts, max_bin)
+    return ell, g, h, bv
+
+
+def _host_page_stream(pages, stats):
+    import jax.numpy as jnp
+
+    return PageStream.from_host_pages(
+        pages,
+        to_array=lambda p: np.ascontiguousarray(p.bins),
+        put=lambda a: jax.device_put(a).astype(jnp.int32),
+        stats=stats,
+    )
+
+
+@pytest.mark.parametrize("grow_policy", ["depthwise", "lossguide"])
+def test_single_page_dataset_matches_in_core(grow_policy):
+    """A 1-page page set is the degenerate stream: every per-level and
+    per-node pass stages exactly one page and must equal the in-core build."""
+    import jax.numpy as jnp
+
+    from repro.core.ellpack import EllpackPage
+    from repro.core.outofcore import build_tree_paged
+    from repro.core.tree import TreeParams, grow_tree
+
+    ell, g, h, bv = _edge_case_fixture()
+    bins_u8 = ell.single_page().bins
+    n = bins_u8.shape[0]
+    tp = TreeParams(max_depth=3, grow_policy=grow_policy, max_leaves=8)
+    res = grow_tree(
+        jnp.asarray(bins_u8.astype(np.int32)), g, h, 8, bv, tp,
+        ell.cuts.values, ell.cuts.ptrs,
+    )
+    stats = TransferStats()
+    pages = [EllpackPage(bins=bins_u8, row_offset=0)]
+    tree, positions = build_tree_paged(
+        lambda: _host_page_stream(pages, stats), [(0, n)], g, h, 8, bv, tp,
+        ell.cuts.values, ell.cuts.ptrs,
+    )
+    assert_trees_equal(
+        tree, res.tree, got_positions=positions[0], want_positions=res.positions
+    )
+
+
+@pytest.mark.parametrize("grow_policy", ["depthwise", "lossguide"])
+def test_empty_last_page_is_harmless(grow_policy):
+    """A 0-row trailing page (ragged page split) streams, stages, histograms,
+    and partitions without perturbing the tree."""
+    import jax.numpy as jnp
+
+    from repro.core.ellpack import EllpackPage
+    from repro.core.outofcore import build_tree_paged
+    from repro.core.tree import TreeParams, grow_tree
+
+    ell, g, h, bv = _edge_case_fixture()
+    bins_u8 = ell.single_page().bins
+    n = bins_u8.shape[0]
+    tp = TreeParams(max_depth=3, grow_policy=grow_policy, max_leaves=8)
+    res = grow_tree(
+        jnp.asarray(bins_u8.astype(np.int32)), g, h, 8, bv, tp,
+        ell.cuts.values, ell.cuts.ptrs,
+    )
+    extents = [(0, 128), (128, n - 128), (n, 0)]  # empty last page
+    pages = [
+        EllpackPage(bins=bins_u8[lo:lo + nr], row_offset=lo) for lo, nr in extents
+    ]
+    stats = TransferStats()
+    tree, positions = build_tree_paged(
+        lambda: _host_page_stream(pages, stats), extents, g, h, 8, bv, tp,
+        ell.cuts.values, ell.cuts.ptrs,
+    )
+    assert positions[2].shape == (0,)
+    pos_full = jnp.concatenate([positions[i] for i in range(3)])
+    assert_trees_equal(
+        tree, res.tree, got_positions=pos_full, want_positions=res.positions
+    )
+
+
+def test_histogram_pass_touching_zero_pages_is_all_zeros():
+    """A per-node pass whose active row set lives on no page (all positions
+    frozen elsewhere / outside the window) must stream cleanly and return an
+    all-zero histogram — with and without a node_map."""
+    import jax.numpy as jnp
+
+    from repro.core.ellpack import EllpackPage
+    from repro.kernels import ops
+
+    ell, g, h, _ = _edge_case_fixture()
+    bins_u8 = ell.single_page().bins
+    n = bins_u8.shape[0]
+    extents = [(0, 128), (128, n - 128)]
+    pages = [
+        EllpackPage(bins=bins_u8[lo:lo + nr], row_offset=lo) for lo, nr in extents
+    ]
+    # every row frozen at heap node 1: a pass over the window [3, 5) — node
+    # 1's grandchildren — touches zero rows on every page
+    positions = {i: jnp.full(nr, 1, jnp.int32) for i, (_, nr) in enumerate(extents)}
+
+    stats = TransferStats()
+    hist = ops.build_histogram_paged(
+        _host_page_stream(pages, stats), g, h, positions, 3, 2, 8,
+    )
+    assert hist.shape == (2, bins_u8.shape[1], 8, 2)
+    np.testing.assert_array_equal(np.asarray(hist), 0.0)
+
+    node_map = jnp.asarray([0, -1], jnp.int32)  # build slot for node 3 only
+    hist_sub = ops.build_histogram_paged(
+        _host_page_stream(pages, stats), g, h, positions, 3, 1, 8,
+        node_map=node_map,
+    )
+    assert hist_sub.shape == (1, bins_u8.shape[1], 8, 2)
+    np.testing.assert_array_equal(np.asarray(hist_sub), 0.0)
+    assert stats.host_to_device_bytes > 0  # the pages still streamed
+
+
 def test_distributed_paged_matches_in_core(source_small):
     """grow_tree_distributed_paged over PageStream == single-device grow_tree."""
     import jax.numpy as jnp
@@ -224,8 +353,7 @@ def test_distributed_paged_matches_in_core(source_small):
         mesh, make_stream, extents, g, h, 16, bv, tp, cfg,
         ell.cuts.values, ell.cuts.ptrs,
     )
-    assert bool(jnp.all(res.tree.feature == tree_d.feature))
-    assert bool(jnp.all(res.tree.split_bin == tree_d.split_bin))
-    assert float(jnp.abs(res.tree.leaf_value - tree_d.leaf_value).max()) < 1e-5
-    assert bool(jnp.all(res.positions == pos_d))
+    assert_trees_equal(
+        tree_d, res.tree, got_positions=pos_d, want_positions=res.positions
+    )
     assert stats.host_to_device_bytes > 0  # pages actually streamed

@@ -2,6 +2,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from oracle import assert_positions_are_leaves, assert_trees_equal
 
 from repro.core.booster import bin_valid_from_cuts
 from repro.core.ellpack import bin_batch, create_ellpack_inmemory
@@ -91,12 +92,18 @@ def test_positions_are_leaves_and_match_predict():
     tp = TreeParams(max_depth=4)
     res = grow_tree(bins, jnp.asarray(g), jnp.asarray(h), 16, bv, tp,
                     ell.cuts.values, ell.cuts.ptrs)
-    leaves = np.asarray(res.tree.is_leaf)
-    pos = np.asarray(res.positions)
-    assert np.all(leaves[pos])
+    assert_positions_are_leaves(res.tree, res.positions)
     via_traversal = np.asarray(predict_tree_bins(res.tree, bins, 4))
-    via_positions = np.asarray(res.tree.leaf_value)[pos]
+    via_positions = np.asarray(res.tree.leaf_value)[np.asarray(res.positions)]
     np.testing.assert_allclose(via_traversal, via_positions, rtol=1e-6)
+
+    # the same build is oracle-equal to itself rerun (jit determinism pin)
+    res2 = grow_tree(bins, jnp.asarray(g), jnp.asarray(h), 16, bv, tp,
+                     ell.cuts.values, ell.cuts.ptrs)
+    assert_trees_equal(
+        res2.tree, res.tree, got_positions=res2.positions,
+        want_positions=res.positions, exact=True,
+    )
 
 
 def test_raw_and_binned_prediction_agree():
