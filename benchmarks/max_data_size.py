@@ -16,7 +16,8 @@ from repro.core.memory import DeviceMemoryModel, GiB
 
 def validate_model_on_small_instance() -> dict:
     """Check the byte model against actual array sizes for a real run."""
-    from repro.core import BoosterParams, ExternalGradientBooster, SamplingConfig
+    from repro.core import BoosterParams, ExecutionPolicy, GradientBooster, SamplingConfig
+    from repro.data.dmatrix import IterDMatrix
     from repro.data.pages import TransferStats
     from repro.data.synthetic import SyntheticSource
 
@@ -24,13 +25,14 @@ def validate_model_on_small_instance() -> dict:
     model = DeviceMemoryModel(num_features=m, max_bin=32, max_depth=4, page_bytes=8192)
     src = SyntheticSource(n_rows=n_rows, num_features=m, batch_rows=1024, seed=1)
     stats = TransferStats()
-    b = ExternalGradientBooster(
+    dm = IterDMatrix(src, max_bin=32, page_bytes=8192, stats=stats)
+    b = GradientBooster(
         BoosterParams(n_estimators=2, max_depth=4, max_bin=32,
                       objective="binary:logistic",
                       sampling=SamplingConfig(method="mvs", f=0.25)),
-        page_bytes=8192, stats=stats,
+        policy=ExecutionPolicy(mode="out_of_core"),
     )
-    b.fit(src)
+    b.fit(dm)
     # actual compacted page ~ f * n * m bytes (the dominant device buffer)
     predicted_sampled = model.ellpack_bytes(int(0.25 * n_rows))
     return {

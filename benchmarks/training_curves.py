@@ -18,26 +18,28 @@ from benchmarks.common import (
     higgs_sources,
     save_result,
 )
-from repro.core import BoosterParams, ExternalGradientBooster, SamplingConfig
+from repro.core import BoosterParams, ExecutionPolicy, GradientBooster, SamplingConfig
+from repro.data.dmatrix import IterDMatrix
 
 
 def main(quick: bool = False) -> list[str]:
     train_src, eval_src = higgs_sources()
     Xe, ye = eval_src.materialize()
+    dm = IterDMatrix(train_src, max_bin=MAX_BIN, page_bytes=PAGE_BYTES)
     ratios = [1.0, 0.3] if quick else [1.0, 0.5, 0.3, 0.1]
     curves = {}
     rows = []
     for f in ratios:
         cfg = SamplingConfig(method="mvs", f=f) if f < 1.0 else SamplingConfig()
-        b = ExternalGradientBooster(
+        b = GradientBooster(
             BoosterParams(
                 n_estimators=N_TREES, max_depth=MAX_DEPTH, max_bin=MAX_BIN,
                 learning_rate=0.1, objective="binary:logistic", sampling=cfg, seed=0,
             ),
-            page_bytes=PAGE_BYTES,
+            policy=ExecutionPolicy(mode="out_of_core"),
         )
         t0 = time.perf_counter()
-        b.fit(train_src, eval_set=(Xe, ye))
+        b.fit(dm, eval_set=(Xe, ye))
         dt = time.perf_counter() - t0
         curves[f"f={f}"] = [round(r.value, 5) for r in b.eval_history]
         rows.append(csv_row(f"fig1_curve_f{f}", dt * 1e6 / N_TREES,

@@ -15,6 +15,11 @@ the full ``max_leaves = 2**max_depth`` budget it grows the same trees as
 depthwise (AUC delta pinned <= 5e-3 in the derived column), trading the
 per-level histogram pass for one pass per popped leaf. Override the growth
 axis from the CLI — see ``--grow-policy`` / ``--max-leaves`` in ``--help``.
+
+Two ``policy_*`` rows exercise the unified DMatrix surface: the same
+`IterDMatrix` trained with ``ExecutionPolicy(mode="auto")`` under a budget
+that forces the decision procedure off-device, against the explicitly forced
+``mode="out_of_core"`` — the forests are bit-identical (auc_delta=0.000000).
 """
 from __future__ import annotations
 
@@ -30,8 +35,9 @@ from benchmarks.common import (
     higgs_sources,
     save_result,
 )
-from repro.core import BoosterParams, ExternalGradientBooster, GradientBooster, SamplingConfig
+from repro.core import BoosterParams, ExecutionPolicy, GradientBooster, SamplingConfig
 from repro.core.objectives import auc
+from repro.data.dmatrix import IterDMatrix
 from repro.data.pages import TransferStats
 
 
@@ -113,16 +119,50 @@ def main(
     def ooc(f: float | None, hist_subtraction: bool = True):
         stats = TransferStats()
         cfg = SamplingConfig(method="mvs", f=f) if f else SamplingConfig()
-        b = ExternalGradientBooster(
-            _params(cfg, hist_subtraction), page_bytes=PAGE_BYTES, stats=stats
+        dm = IterDMatrix(
+            train_src, max_bin=MAX_BIN, page_bytes=PAGE_BYTES, stats=stats
         )
-        b.fit(train_src)
+        b = GradientBooster(
+            _params(cfg, hist_subtraction), policy=ExecutionPolicy(mode="out_of_core")
+        )
+        b.fit(dm)
         return b, stats
 
     record("gpu_out_of_core_f1.0", lambda: ooc(None))
     record("gpu_out_of_core_f1.0_fullbuild", lambda: ooc(None, hist_subtraction=False))
     for f in ([0.3] if quick else [0.5, 0.3, 0.1]):
         record(f"gpu_out_of_core_f{f}", lambda f=f: ooc(f))
+
+    # --- ExecutionPolicy auto-selection: mode="auto" under a budget halfway
+    # between the streaming floor and the in-core threshold must resolve to
+    # out-of-core and grow the bit-identical forest the forced mode grows
+    shared_cuts_dm = IterDMatrix(train_src, max_bin=MAX_BIN, page_bytes=PAGE_BYTES)
+    probe = ExecutionPolicy().memory_model(shared_cuts_dm, _params())
+    budget = (
+        probe.in_core_bytes(shared_cuts_dm.n_rows)
+        + probe.out_of_core_bytes(shared_cuts_dm.n_rows)
+    ) // 2
+
+    def policy_fit(policy: ExecutionPolicy):
+        def run():
+            # fresh stats + pages per row (like ooc()); the shared cuts keep
+            # the two runs training on bit-identical quantization
+            stats = TransferStats()
+            dm = IterDMatrix(
+                train_src, max_bin=MAX_BIN, cuts=shared_cuts_dm.cuts,
+                page_bytes=PAGE_BYTES, stats=stats,
+            )
+            b = GradientBooster(_params(), policy=policy)
+            b.fit(dm)
+            return b, stats
+
+        return run
+
+    record(
+        "policy_auto",
+        policy_fit(ExecutionPolicy(mode="auto", memory_budget_bytes=budget)),
+    )
+    record("policy_forced_out_of_core", policy_fit(ExecutionPolicy(mode="out_of_core")))
 
     # subtraction must not change what the model learns (+-1e-3 AUC);
     # compare the unrounded values — the stored ones are display-rounded
@@ -135,6 +175,22 @@ def main(
     }
     out_rows.append(
         csv_row("table2_hist_subtraction_auc_delta", 0.0, f"auc_delta={auc_delta:.6f}")
+    )
+
+    # auto-selected vs explicitly-forced mode must be the SAME model exactly:
+    # both resolved to the streaming engine over the same DMatrix (same cuts,
+    # same seed), so the forests are bit-identical — auc_delta = 0.000000
+    policy_delta = abs(raw_auc["policy_auto"] - raw_auc["policy_forced_out_of_core"])
+    results["execution_policy"] = {
+        "memory_budget_bytes": int(budget),
+        "auc_delta_auto_vs_forced": round(policy_delta, 6),
+        "auto_equals_forced": bool(policy_delta == 0.0),
+    }
+    out_rows.append(
+        csv_row(
+            "table2_policy_auto_vs_forced_auc_delta", 0.0,
+            f"auc_delta={policy_delta:.6f}",
+        )
     )
 
     # the comparison row must learn the same model (acceptance bar: AUC within

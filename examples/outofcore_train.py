@@ -1,11 +1,14 @@
 """END-TO-END DRIVER: out-of-core GBDT training exactly as the paper runs it.
 
-Streams a dataset that (by construction) never sits in memory at once:
-  1. incremental quantile sketch over batches          (Alg. 3)
-  2. ELLPACK pages written to disk                     (Alg. 5)
-  3. per-iteration MVS sampling + page compaction      (Alg. 7)
+Streams a dataset that (by construction) never sits in memory at once,
+through the unified DMatrix surface:
+  1. incremental quantile sketch over batches          (Alg. 3, IterDMatrix)
+  2. ELLPACK pages written to disk                     (Alg. 5, PageStore)
+  3. per-iteration MVS sampling + page compaction      (Alg. 7, the policy's
+                                                        sampled fast path)
   4. margin cache updates by streaming pages
-  5. periodic checkpoints + a simulated crash/resume   (fault tolerance)
+  5. periodic checkpoints + a simulated crash/resume from the on-disk page
+     cache alone (PagedDMatrix — the raw data is never re-read)
 
     PYTHONPATH=src python examples/outofcore_train.py [--rows 200000] [--trees 200]
 """
@@ -14,8 +17,9 @@ import os
 import tempfile
 import time
 
-from repro.core import BoosterParams, ExternalGradientBooster, SamplingConfig
+from repro.core import BoosterParams, ExecutionPolicy, GradientBooster, SamplingConfig
 from repro.core.objectives import auc
+from repro.data.dmatrix import IterDMatrix, PagedDMatrix
 from repro.data.pages import TransferStats
 from repro.data.synthetic import SyntheticSource
 
@@ -42,28 +46,33 @@ def main():
         sampling=SamplingConfig(method="mvs", f=args.sample_ratio), seed=0,
     )
     ckpt = os.path.join(workdir, "ckpt")
-    booster = ExternalGradientBooster(
-        params, cache_dir=os.path.join(workdir, "pages"), page_bytes=256 * 1024,
-        stats=stats, checkpoint_every=20, checkpoint_dir=ckpt,
-    )
+    cache = os.path.join(workdir, "pages")
+    policy = ExecutionPolicy(mode="out_of_core", checkpoint_every=20, checkpoint_dir=ckpt)
 
     print(f"workdir: {workdir}")
     t0 = time.perf_counter()
+    dm = IterDMatrix(train, max_bin=128, cache_dir=cache,
+                     page_bytes=256 * 1024, stats=stats)
     half = args.trees // 2
-    booster.params = params.__class__(**{**params.__dict__, "n_estimators": half})
-    booster.fit(train, eval_set=(Xe, ye), verbose=True)
-    booster.save(ckpt)
-    print(f"\n-- simulated crash after {half} trees; resuming from {ckpt} --\n")
-
-    resumed = ExternalGradientBooster.resume(
-        ckpt, train, cache_dir=os.path.join(workdir, "pages2"), page_bytes=256 * 1024,
+    booster = GradientBooster(
+        BoosterParams(**{**params.__dict__, "n_estimators": half}), policy=policy
     )
+    booster.fit(dm, eval_set=(Xe, ye), verbose=True)
+    booster.save(ckpt)
+    print(f"\n-- simulated crash after {half} trees; resuming from {ckpt} "
+          "using only the on-disk page cache --\n")
+
+    # resume from the spilled pages alone: PagedDMatrix reopens the cache
+    # directory (cuts + labels from its sidecar), no raw-data pass needed
+    resumed_dm = PagedDMatrix(cache, stats=stats)
+    resumed = GradientBooster.resume(ckpt, resumed_dm, policy=policy)
     resumed.params = params
-    resumed.fit(train, eval_set=(Xe, ye), verbose=True, start_iteration=half)
+    resumed.fit(resumed_dm, eval_set=(Xe, ye), verbose=True, start_iteration=half)
 
     dt = time.perf_counter() - t0
-    print(f"\ntrained {len(resumed.trees)} trees in {dt:.1f}s")
-    print(f"pages on disk:      {resumed.pages.n_pages}")
+    print(f"\ntrained {len(resumed.trees)} trees in {dt:.1f}s "
+          f"(mode: {resumed.decision_.mode}, f={resumed.decision_.sampling_f})")
+    print(f"pages on disk:      {resumed_dm.n_pages}")
     print(f"disk written:       {stats.disk_write_bytes/2**20:.1f} MiB")
     print(f"host->device moved: {stats.host_to_device_bytes/2**20:.1f} MiB")
     print(f"stream overlap:     {stats.overlap_ratio:.2f} "

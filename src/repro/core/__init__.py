@@ -13,7 +13,8 @@ from repro.core.ellpack import (
 from repro.core.histcache import HistCacheStats, HistogramCache, LevelPlan
 from repro.core.memory import DeviceMemoryModel
 from repro.core.objectives import LOGISTIC, SQUARED_ERROR, get_objective
-from repro.core.outofcore import ExternalGradientBooster
+from repro.core.outofcore import ExternalGradientBooster, build_tree_paged
+from repro.core.policy import ExecutionDecision, ExecutionPolicy
 from repro.core.quantile import HistogramCuts, QuantileSketch, sketch_dense
 from repro.core.sampling import SamplingConfig, estimate_mvs_lambda, mvs_threshold, sample
 from repro.core.split import SplitParams, evaluate_splits, leaf_weight
@@ -44,6 +45,9 @@ __all__ = [
     "create_ellpack_inmemory",
     "create_ellpack_pages",
     "DeviceMemoryModel",
+    "ExecutionDecision",
+    "ExecutionPolicy",
+    "build_tree_paged",
     "HistCacheStats",
     "HistogramCache",
     "LevelPlan",

@@ -1,9 +1,17 @@
-"""GradientBooster: in-core training facade (paper §2.1/2.2 baseline).
+"""GradientBooster: the single estimator surface over every training mode.
 
-The in-core path quantizes the whole matrix as one ELLPACK page resident on
-device and runs Alg. 1 per boosting round. Sampling (SGB/GOSS/MVS) is applied
-as a gradient mask — numerically identical to compact-and-build (the histogram
-only sees sampled rows' gradients) while keeping shapes static.
+The paper's usability claim is that one estimator hides the out-of-core
+machinery: the user calls ``fit`` with DMatrix-shaped data and the library
+decides — via `ExecutionPolicy` and the Table-1 byte model — whether the data
+trains in-core (whole ELLPACK matrix resident, Alg. 1 per round), out-of-core
+(PageStream passes per tree level, Alg. 6), or out-of-core with gradient-based
+sampling (compacted page, Alg. 7). All three engines live here behind one
+``fit``; `repro.core.outofcore.ExternalGradientBooster` survives only as a
+deprecated alias.
+
+Sampling in-core is applied as a gradient mask — numerically identical to
+compact-and-build (the histogram only sees sampled rows' gradients) while
+keeping shapes static.
 """
 from __future__ import annotations
 
@@ -11,20 +19,20 @@ import dataclasses
 import json
 import os
 import time
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import objectives as obj_lib
-from repro.core.ellpack import EllpackMatrix, create_ellpack_inmemory
 from repro.core.histcache import HistogramCache
+from repro.core.policy import ExecutionDecision, ExecutionPolicy, sampling_requested
 from repro.core.quantile import HistogramCuts
 from repro.core.sampling import SamplingConfig, sample
 from repro.core.split import SplitParams
 from repro.core.tree import (
     TreeArrays,
+    TreeBuildResult,
     TreeParams,
     grow_tree,
     predict_tree_bins,
@@ -36,6 +44,14 @@ Array = jax.Array
 
 @dataclasses.dataclass
 class BoosterParams:
+    """Model hyperparameters — the single validated config surface.
+
+    Execution concerns (mode selection, memory budget, streaming depths,
+    checkpoint cadence) live on `ExecutionPolicy`; data concerns (cuts,
+    paging, cache_dir) live on the `DMatrix`. `tree_params()` is the one
+    place a `TreeParams` is derived from booster config.
+    """
+
     n_estimators: int = 100
     learning_rate: float = 0.3
     max_depth: int = 6
@@ -58,6 +74,30 @@ class BoosterParams:
     # max_depth); max_leaves=0 means up to the 2^max_depth complete tree
     grow_policy: str = "depthwise"
     max_leaves: int = 0
+
+    def __post_init__(self) -> None:
+        if self.n_estimators < 1:
+            raise ValueError(f"n_estimators must be >= 1; got {self.n_estimators}")
+        if self.max_depth < 1:
+            raise ValueError(f"max_depth must be >= 1; got {self.max_depth}")
+        if self.learning_rate <= 0.0:
+            raise ValueError(f"learning_rate must be > 0; got {self.learning_rate}")
+        if self.max_bin < 2:
+            raise ValueError(f"max_bin must be >= 2; got {self.max_bin}")
+        if self.grow_policy not in ("depthwise", "lossguide"):
+            raise ValueError(
+                f"grow_policy must be 'depthwise' or 'lossguide'; got {self.grow_policy!r}"
+            )
+        if self.max_leaves < 0:
+            raise ValueError(f"max_leaves must be >= 0; got {self.max_leaves}")
+        if self.kernel_impl not in ("auto", "pallas", "ref"):
+            raise ValueError(
+                f"kernel_impl must be 'auto', 'pallas', or 'ref'; got {self.kernel_impl!r}"
+            )
+        if self.early_stopping_rounds is not None and self.early_stopping_rounds < 1:
+            raise ValueError(
+                f"early_stopping_rounds must be >= 1 or None; got {self.early_stopping_rounds}"
+            )
 
     def tree_params(self) -> TreeParams:
         return TreeParams(
@@ -90,14 +130,27 @@ class EvalRecord:
 
 
 class GradientBooster:
-    """XGBoost-like estimator over the JAX tree builder."""
+    """XGBoost-like estimator over the JAX tree builder, every training mode.
 
-    def __init__(self, params: BoosterParams | None = None, **kwargs):
+    ``fit`` accepts a `DMatrix` (ArrayDMatrix / IterDMatrix / PagedDMatrix),
+    raw ``(X, y)`` ndarrays, or a batch source; the `ExecutionPolicy` decides
+    in-core vs out-of-core vs sampled against the memory budget. The chosen
+    `ExecutionDecision` is recorded on ``self.decision_``.
+    """
+
+    def __init__(
+        self,
+        params: BoosterParams | None = None,
+        *,
+        policy: ExecutionPolicy | None = None,
+        **kwargs,
+    ):
         if params is None:
             params = BoosterParams(**kwargs)
         elif kwargs:
             params = dataclasses.replace(params, **kwargs)
         self.params = params
+        self.policy = policy if policy is not None else ExecutionPolicy()
         self.objective = obj_lib.get_objective(params.objective)
         self.trees: list[TreeArrays] = []
         self.cuts: HistogramCuts | None = None
@@ -106,50 +159,145 @@ class GradientBooster:
         # build-vs-derive ledger accumulated over every tree of the last fit
         self.hist_cache = HistogramCache(enabled=params.hist_subtraction)
         self._rng = jax.random.PRNGKey(params.seed)
+        self.decision_: ExecutionDecision | None = None
+        # external-mode state (filled when the decision routes off-device)
+        self.pages = None  # PageSet of the last external fit
+        self.stats = None  # its TransferStats
+        self.labels_: np.ndarray | None = None
+        self.margins_: np.ndarray | None = None
+        self._device_cache = None
+
+    # ---------------------------------------------------------- sklearn compat
+    def get_params(self, deep: bool = True) -> dict:
+        """Flat `BoosterParams` fields + ``policy``, sklearn-style.
+
+        ``deep=True`` additionally flattens the nested dataclasses with the
+        double-underscore convention (``sampling__f``, ``policy__mode``) so
+        grid search can address them; ``deep=False`` returns exactly the
+        kwargs that reconstruct this estimator — ``clone()`` semantics.
+        """
+        out = {f.name: getattr(self.params, f.name) for f in dataclasses.fields(BoosterParams)}
+        out["policy"] = self.policy
+        if deep:
+            for fld in dataclasses.fields(SamplingConfig):
+                out[f"sampling__{fld.name}"] = getattr(self.params.sampling, fld.name)
+            for fld in dataclasses.fields(ExecutionPolicy):
+                out[f"policy__{fld.name}"] = getattr(self.policy, fld.name)
+        return out
+
+    def set_params(self, **updates) -> "GradientBooster":
+        """sklearn-style parameter update; accepts the same keys `get_params`
+        emits (flat fields, ``policy``, and ``sampling__*`` / ``policy__*``)."""
+        field_names = {f.name for f in dataclasses.fields(BoosterParams)}
+        flat: dict = {}
+        nested: dict[str, dict] = {"sampling": {}, "policy": {}}
+        for key, val in updates.items():
+            if key == "policy":
+                self.policy = val
+            elif "__" in key:
+                head, _, tail = key.partition("__")
+                if head not in nested:
+                    raise ValueError(
+                        f"invalid nested parameter {key!r}; nestable prefixes are "
+                        "'sampling__' and 'policy__'"
+                    )
+                nested[head][tail] = val
+            elif key in field_names:
+                flat[key] = val
+            else:
+                raise ValueError(
+                    f"invalid parameter {key!r} for GradientBooster; valid "
+                    f"parameters are {sorted(field_names | {'policy'})}"
+                )
+        if nested["sampling"]:
+            flat["sampling"] = dataclasses.replace(
+                flat.get("sampling", self.params.sampling), **nested["sampling"]
+            )
+        if flat:
+            self.params = dataclasses.replace(self.params, **flat)
+        if nested["policy"]:
+            self.policy = dataclasses.replace(self.policy, **nested["policy"])
+        self.objective = obj_lib.get_objective(self.params.objective)
+        self.hist_cache = HistogramCache(enabled=self.params.hist_subtraction)
+        self._rng = jax.random.PRNGKey(self.params.seed)
+        return self
 
     # ------------------------------------------------------------------ fit
     def fit(
         self,
-        X: np.ndarray,
-        y: np.ndarray,
+        data,
+        y: np.ndarray | None = None,
+        *,
         eval_set: tuple[np.ndarray, np.ndarray] | None = None,
         eval_metric: str = "auto",
         verbose: bool = False,
         cuts: HistogramCuts | None = None,
+        start_iteration: int = 0,
+    ) -> "GradientBooster":
+        """Train on a DMatrix, raw arrays, or a batch source.
+
+        The `ExecutionPolicy` picks the engine; the decision (mode, sampling
+        fraction, byte model, reason) lands on ``self.decision_``.
+        """
+        from repro.data.dmatrix import as_dmatrix
+
+        p = self.params
+        dm = as_dmatrix(data, y, max_bin=p.max_bin, cuts=cuts)
+        decision = self.policy.decide(dm, p)
+        self.decision_ = decision
+        self.cuts = dm.cuts
+        if decision.mode == "in_core":
+            return self._fit_in_core(dm, eval_set, eval_metric, verbose, start_iteration)
+        return self._fit_external(
+            dm, decision, eval_set, eval_metric, verbose, start_iteration
+        )
+
+    # ------------------------------------------------------- in-core engine
+    def _fit_in_core(
+        self, dm, eval_set, eval_metric, verbose, start_iteration=0
     ) -> "GradientBooster":
         p = self.params
-        # fresh ledger: stats cover exactly this fit() call
-        self.hist_cache = HistogramCache(enabled=p.hist_subtraction)
-        y = np.asarray(y, dtype=np.float32)
-        ell: EllpackMatrix = create_ellpack_inmemory(
-            X, max_bin=min(p.max_bin, 255), cuts=cuts
-        )
-        self.cuts = ell.cuts
-        n_bins = min(p.max_bin, 255)
-        bin_valid = bin_valid_from_cuts(ell.cuts, n_bins)
-        bins = jnp.asarray(ell.single_page().bins.astype(np.int32))
-        labels = jnp.asarray(y)
+        if start_iteration and len(self.trees) != start_iteration:
+            raise ValueError(
+                f"start_iteration={start_iteration} but the booster holds "
+                f"{len(self.trees)} trees; resume with start_iteration == len(trees)"
+            )
+        if start_iteration == 0:
+            # fresh ledger: stats cover exactly this fit() call
+            self.hist_cache = HistogramCache(enabled=p.hist_subtraction)
+        labels = dm.require_labels()
+        n_bins = dm.n_bins
+        bin_valid = bin_valid_from_cuts(dm.cuts, n_bins)
+        bins = jnp.asarray(dm.single_page_bins().astype(np.int32))
+        labels_j = jnp.asarray(labels)
 
-        self.base_margin_ = (
-            p.base_score if p.base_score is not None else self.objective.base_margin(y)
-        )
-        margin = jnp.full(y.shape[0], self.base_margin_, jnp.float32)
+        if start_iteration == 0:
+            self.base_margin_ = (
+                p.base_score if p.base_score is not None else self.objective.base_margin(labels)
+            )
+        margin = jnp.full(labels.shape[0], self.base_margin_, jnp.float32)
+        for tree in self.trees:  # resumed run: replay the restored forest
+            margin = margin + p.learning_rate * predict_tree_bins(tree, bins, p.max_depth)
 
         eval_bins = eval_labels = None
         eval_margin = None
         if eval_set is not None:
             from repro.core.ellpack import bin_batch
 
-            eval_bins = jnp.asarray(bin_batch(eval_set[0], ell.cuts).astype(np.int32))
+            eval_bins = jnp.asarray(bin_batch(eval_set[0], dm.cuts).astype(np.int32))
             eval_labels = np.asarray(eval_set[1], dtype=np.float32)
             eval_margin = jnp.full(eval_labels.shape[0], self.base_margin_, jnp.float32)
+            for tree in self.trees:
+                eval_margin = eval_margin + p.learning_rate * predict_tree_bins(
+                    tree, eval_bins, p.max_depth
+                )
         metric_name = self._metric_name(eval_metric)
 
         tp = p.tree_params()
         t0 = time.perf_counter()
         best_metric, best_iter = None, -1
-        for it in range(p.n_estimators):
-            g, h = self.objective.grad_hess(margin, labels)
+        for it in range(start_iteration, p.n_estimators):
+            g, h = self.objective.grad_hess(margin, labels_j)
             self._rng, k = jax.random.split(self._rng)
             mask, w = sample(k, g, h, p.sampling)
             scale = jnp.where(mask, w, 0.0)
@@ -160,8 +308,8 @@ class GradientBooster:
                 n_bins,
                 bin_valid,
                 tp,
-                cut_values=ell.cuts.values,
-                cut_ptrs=ell.cuts.ptrs,
+                cut_values=dm.cuts.values,
+                cut_ptrs=dm.cuts.ptrs,
                 impl=p.kernel_impl,
                 hist_cache=self.hist_cache,
             )
@@ -191,6 +339,182 @@ class GradientBooster:
         self.best_iteration_ = best_iter if best_iter >= 0 else len(self.trees) - 1
         return self
 
+    # ----------------------------------------------------- external engines
+    def _stream(self, indices=None, staging_depth: int | None = None):
+        """One `PageStream` pass over the last external fit's page set."""
+        return self.pages.stream(
+            prefetch_depth=self.policy.prefetch_depth,
+            staging_depth=staging_depth or self.policy.staging_depth,
+            cache=self._device_cache,
+            indices=indices,
+        )
+
+    def _fit_external(
+        self, dm, decision, eval_set, eval_metric, verbose, start_iteration
+    ) -> "GradientBooster":
+        from repro.core.ellpack import bin_batch
+        from repro.pipeline import DevicePageCache
+
+        p, pol = self.params, self.policy
+        # fresh ledger unless resuming mid-boosting (keep the run's totals)
+        if start_iteration == 0:
+            self.hist_cache = HistogramCache(enabled=p.hist_subtraction)
+        labels = dm.require_labels()
+        pages = dm.page_set()
+        self.pages = pages
+        self.stats = pages.stats
+        self.labels_ = labels
+        n_bins = dm.n_bins
+        bin_valid = bin_valid_from_cuts(dm.cuts, n_bins)
+        labels_j = jnp.asarray(labels)
+
+        if self.margins_ is None:
+            self.base_margin_ = (
+                p.base_score if p.base_score is not None else self.objective.base_margin(labels)
+            )
+            self.margins_ = np.full(pages.n_rows, self.base_margin_, np.float32)
+
+        eval_bins = eval_labels = eval_margin = None
+        if eval_set is not None:
+            eval_bins = jnp.asarray(bin_batch(eval_set[0], dm.cuts).astype(np.int32))
+            eval_labels = np.asarray(eval_set[1], np.float32)
+            eval_margin = jnp.full(eval_labels.shape[0], self.base_margin_, jnp.float32)
+            md = p.max_depth
+            for t in self.trees:  # resumed run: rebuild eval margins
+                eval_margin = eval_margin + p.learning_rate * predict_tree_bins(t, eval_bins, md)
+        metric_name = self._metric_name(eval_metric)
+
+        tp = p.tree_params()
+        use_sampling = decision.mode == "sampled"
+        sampling_cfg = p.sampling
+        if use_sampling and not sampling_requested(p.sampling):
+            # policy-chosen fraction: the paper's MVS default at the largest
+            # f whose compacted page fits the budget
+            sampling_cfg = SamplingConfig(method="mvs", f=decision.sampling_f or 0.5)
+        cache_pages = pol.device_cache_pages
+        if cache_pages is None:
+            # auto: cache only when the whole page set fits (a sequential LRU
+            # scan over more pages than capacity evicts every page right
+            # before its reuse — zero hits), and only on the f<1 fast path
+            # where pages are revisited once per iteration.
+            fits = pages.n_pages <= 8
+            cache_pages = pages.n_pages if (use_sampling and fits) else 0
+        self._device_cache = DevicePageCache(cache_pages) if cache_pages > 0 else None
+        t0 = time.perf_counter()
+        for it in range(start_iteration, p.n_estimators):
+            g, h = self.objective.grad_hess(jnp.asarray(self.margins_), labels_j)
+            self._rng, k = jax.random.split(self._rng)
+            if use_sampling:
+                res = self._build_tree_sampled(
+                    k, g, h, n_bins, bin_valid, tp, dm.cuts, sampling_cfg
+                )
+            else:
+                res = self._build_tree_streaming(g, h, n_bins, bin_valid, tp, dm.cuts)
+            self.trees.append(res.tree)
+            self._update_margins(res, tp)
+            if eval_bins is not None:
+                pred = predict_tree_bins(res.tree, eval_bins, tp.max_depth)
+                eval_margin = eval_margin + p.learning_rate * pred
+                val = self._eval(metric_name, eval_labels, eval_margin)
+                self.eval_history.append(
+                    EvalRecord(it, metric_name, val, time.perf_counter() - t0)
+                )
+                if verbose:
+                    print(f"[{it}] {metric_name}={val:.6f}")
+            if (
+                pol.checkpoint_every
+                and pol.checkpoint_dir
+                and (it + 1) % pol.checkpoint_every == 0
+            ):
+                self.save(pol.checkpoint_dir)
+        return self
+
+    # -------------------------------------------------- Alg. 7 (sampled path)
+    def _sampled_capacity(self, n_rows: int, sampling_cfg: SamplingConfig) -> int:
+        """Static compacted-page capacity: keeps jit shapes stable across
+        iterations (Bernoulli sampling varies the kept count slightly)."""
+        f = sampling_cfg.f if sampling_cfg.method != "goss" else (
+            sampling_cfg.goss_a + sampling_cfg.goss_b
+        )
+        cap = int(n_rows * min(1.0, f * 1.25)) + 256
+        return min(n_rows, -(-cap // 1024) * 1024)
+
+    def _build_tree_sampled(
+        self, key, g, h, n_bins, bin_valid, tp, cuts, sampling_cfg
+    ) -> TreeBuildResult:
+        p = self.params
+        mask, w = sample(key, g, h, sampling_cfg)
+        mask_np = np.asarray(mask)
+        sel = np.nonzero(mask_np)[0]
+        capacity = self._sampled_capacity(self.pages.n_rows, sampling_cfg)
+        if len(sel) > capacity:  # extreme tail: drop lowest-weight extras
+            sel = sel[:capacity]
+        gw = np.asarray(g * w)
+        hw = np.asarray(h * w)
+
+        # Compact: gather sampled rows from every page into one device page
+        # (host-side pass: the prefetcher overlaps disk reads, nothing staged)
+        chunks: list[np.ndarray] = []
+        for _, page in self._stream().iter_host():
+            lo = np.searchsorted(sel, page.row_offset, side="left")
+            hi = np.searchsorted(sel, page.row_offset + page.n_rows, side="left")
+            if hi > lo:
+                local = sel[lo:hi] - page.row_offset
+                chunks.append(page.bins[local])
+        bins_np = np.concatenate(chunks, axis=0) if chunks else np.zeros(
+            (0, self.pages.num_features), np.uint8
+        )
+        pad = capacity - bins_np.shape[0]
+        g_np = np.zeros(capacity, np.float32)
+        h_np = np.zeros(capacity, np.float32)
+        g_np[: len(sel)] = gw[sel]
+        h_np[: len(sel)] = hw[sel]
+        if pad:  # zero-gradient padding rows: no histogram contribution
+            bins_np = np.concatenate(
+                [bins_np, np.zeros((pad, bins_np.shape[1]), np.uint8)], axis=0
+            )
+        from repro.core.ellpack import EllpackPage
+
+        staged = EllpackPage(bins_np, 0)
+        bins_c = self.pages.stage(staged)
+        res = grow_tree(
+            bins_c, jnp.asarray(g_np), jnp.asarray(h_np), n_bins, bin_valid, tp,
+            cut_values=cuts.values, cut_ptrs=cuts.ptrs,
+            impl=p.kernel_impl, hist_cache=self.hist_cache,
+        )
+        # positions only cover sampled rows -> margin update must stream pages
+        return TreeBuildResult(tree=res.tree, positions=None)
+
+    # ----------------------------------------------- Alg. 6 (streaming path)
+    def _build_tree_streaming(self, g, h, n_bins, bin_valid, tp, cuts) -> TreeBuildResult:
+        from repro.core.outofcore import build_tree_paged
+
+        pages = self.pages
+        extents = pages.page_extents
+        tree, positions = build_tree_paged(
+            self._stream, extents, g, h, n_bins, bin_valid, tp,
+            cuts.values, cuts.ptrs, impl=self.params.kernel_impl,
+            hist_cache=self.hist_cache, page_skipping=self.policy.page_skipping,
+        )
+        # final positions point at leaves: margin update without re-streaming
+        pos_full = np.empty(pages.n_rows, np.int32)
+        for i, (ro, nr) in enumerate(extents):
+            pos_full[ro : ro + nr] = np.asarray(positions[i])
+        return TreeBuildResult(tree=tree, positions=jnp.asarray(pos_full))
+
+    # -------------------------------------------------------- margin update
+    def _update_margins(self, res: TreeBuildResult, tp) -> None:
+        lr = self.params.learning_rate
+        if res.positions is not None:  # streaming path: positions are leaves
+            leaf = np.asarray(res.tree.leaf_value)
+            self.margins_ += lr * leaf[np.asarray(res.positions)]
+            return
+        for sp in self._stream():
+            pred = predict_tree_bins(res.tree, sp.device, tp.max_depth)
+            sl = slice(sp.host.row_offset, sp.host.row_offset + sp.host.n_rows)
+            self.margins_[sl] += lr * np.asarray(pred)
+
+    # ------------------------------------------------------------------ misc
     def _metric_name(self, eval_metric: str) -> str:
         if eval_metric != "auto":
             return eval_metric
@@ -268,8 +592,62 @@ class GradientBooster:
             ]
         return self
 
+    @classmethod
+    def resume(
+        cls,
+        checkpoint_path: str,
+        data,
+        *,
+        policy: ExecutionPolicy | None = None,
+    ) -> "GradientBooster":
+        """Restart external-mode training from a checkpoint.
+
+        Reloads the forest + cuts, rebuilds the margin cache by streaming the
+        data's pages (a `PagedDMatrix` reopening the original cache directory
+        is the natural argument — no raw data needed), and returns a booster
+        ready for ``fit(data, start_iteration=len(trees))``. The checkpointed
+        cuts are authoritative: raw sources are (re)quantized WITH them, and a
+        pre-built DMatrix must carry bit-identical cuts — resuming onto pages
+        binned with different thresholds would silently corrupt the model, so
+        that raises instead.
+        """
+        from repro.data.dmatrix import DMatrix, as_dmatrix
+
+        base = cls.load(checkpoint_path)
+        self = cls(base.params, policy=policy or ExecutionPolicy(mode="out_of_core"))
+        self.trees = base.trees
+        self.base_margin_ = base.base_margin_
+        self._rng = base._rng
+        if isinstance(data, DMatrix):
+            dm = data
+            if not (
+                np.array_equal(dm.cuts.values, base.cuts.values)
+                and np.array_equal(dm.cuts.ptrs, base.cuts.ptrs)
+            ):
+                raise ValueError(
+                    "DMatrix quantization differs from the checkpoint's cuts; "
+                    "its pages were binned with different thresholds than the "
+                    "restored trees split on. Reopen the original page cache "
+                    "(PagedDMatrix) or rebuild the DMatrix from the raw source "
+                    "via resume(ckpt, source)."
+                )
+        else:
+            # quantize the source with the checkpointed cuts (no re-sketch)
+            dm = as_dmatrix(data, max_bin=base.params.max_bin, cuts=base.cuts)
+        self.cuts = base.cuts
+        self.pages = dm.page_set()
+        self.stats = self.pages.stats
+        self.margins_ = np.full(self.pages.n_rows, self.base_margin_, np.float32)
+        md = self.params.max_depth
+        for tree in self.trees:
+            for sp in self._stream():
+                pred = predict_tree_bins(tree, sp.device, md)
+                sl = slice(sp.host.row_offset, sp.host.row_offset + sp.host.n_rows)
+                self.margins_[sl] += self.params.learning_rate * np.asarray(pred)
+        return self
+
 
 def train_in_core(
     X: np.ndarray, y: np.ndarray, params: BoosterParams | None = None, **kw
 ) -> GradientBooster:
-    return GradientBooster(params, **kw).fit(X, y)
+    return GradientBooster(params, policy=ExecutionPolicy(mode="in_core"), **kw).fit(X, y)

@@ -1,131 +1,70 @@
-"""Out-of-core training executors (paper §3, Alg. 3 / 5 / 6 / 7).
+"""Out-of-core tree construction + the deprecated external-trainer alias.
 
-`ExternalGradientBooster` trains on data that does not fit in device memory:
+The out-of-core training engines (Alg. 6 streaming, Alg. 7 sampled) live on
+the unified `GradientBooster` (`repro.core.booster`) and are selected by
+`ExecutionPolicy`; the data side (sketch, paging, spill) lives on the DMatrix
+sources in `repro.data.dmatrix`. This module keeps what is genuinely about
+out-of-core *tree building*:
 
-  preprocessing   Alg. 3: incremental quantile sketch over streamed batches
-                  Alg. 5: quantize batches into ~32 MiB ELLPACK pages, persist
-                          to a PageStore (disk) or host RAM
-  per iteration   gradients are computed from a host-cached margin vector
-    f < 1         Alg. 7: gradient-based sampling -> Compact the sampled rows
-                  from all pages into ONE device-resident page -> in-core
-                  Alg. 1 tree build (fast path; the paper's contribution)
-    f = 1         Alg. 6: naive streaming build — every tree level re-streams
-                  every page through the device (interconnect-bound; kept as
-                  the paper's measured baseline)
-  margin update   stream pages once, gather leaf values per page
+  `build_tree_paged`          one tree over streamed pages (either growth
+                              policy), shared by the single-device streaming
+                              engine and the sharded distributed build —
+                              including per-node page skipping for lossguide
+                              passes (pages with no row in the popped node's
+                              window are never fetched or staged; the skips
+                              are recorded in `TransferStats.pages_skipped`);
+  `ExternalGradientBooster`   deprecated alias over the old front door
+                              (`(params, cache_dir=...)` + ``fit(source)``):
+                              forwards to `GradientBooster` with a forced
+                              out-of-core `ExecutionPolicy` and an
+                              `IterDMatrix` built from the source. Warns
+                              `FutureWarning` once per construction.
 
-All page movement goes through `repro.pipeline.PageStream` (threaded disk
-prefetch + double-buffered host->device staging + optional device-page LRU),
-which also keeps the overlap ledger in `TransferStats`.
-
-Fault tolerance: pages load through a retrying prefetcher; `save`/`resume`
-checkpoints the forest + RNG and rebuilds the margin cache by streaming, so a
-killed run restarts mid-boosting with identical results.
+`PageSet` moved to `repro.data.dmatrix`; importing it from here still works.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Iterator
+import inspect
+import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.booster import BoosterParams, EvalRecord, GradientBooster, bin_valid_from_cuts
-from repro.core.ellpack import (
-    DEFAULT_PAGE_BYTES,
-    EllpackPage,
-    bin_batch,
-    create_ellpack_pages,
-)
+from repro.core.booster import BoosterParams, GradientBooster
+from repro.core.ellpack import DEFAULT_PAGE_BYTES
 from repro.core.histcache import HistogramCache, LevelPlan, level_row_counts
-from repro.core.quantile import QuantileSketch
-from repro.core.sampling import sample
-from repro.core.tree import (
-    TreeBuildResult,
-    grow_tree,
-    predict_tree_bins,
-    tree_growth_driver,
-)
-from repro.data.pages import GLOBAL_STATS, PageStore, TransferStats
+from repro.core.policy import ExecutionPolicy
+from repro.core.tree import predict_tree_bins, tree_growth_driver
+from repro.data.pages import GLOBAL_STATS, TransferStats
 from repro.kernels import ops
-from repro.pipeline import DevicePageCache, PageStream
 
 Array = jax.Array
 
 
-def _bins_to_host_array(page: EllpackPage) -> np.ndarray:
-    # transfer the uint8 ELLPACK page as-is; the int32 upcast the histogram
-    # kernels want happens device-side (4x less PCIe traffic than upcasting
-    # on the host).
-    return np.ascontiguousarray(page.bins)
+def __getattr__(name: str):
+    # compatibility re-export: PageSet's home is the DMatrix module now
+    if name == "PageSet":
+        from repro.data.dmatrix import PageSet
+
+        return PageSet
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 
-def _put_bins(arr: np.ndarray) -> Array:
-    return jax.device_put(arr).astype(jnp.int32)
+def _accepts_indices(make_stream) -> bool:
+    """Can ``make_stream`` start a subset pass (``indices=`` kwarg)?
 
-
-@dataclasses.dataclass
-class PageSet:
-    """The external ELLPACK matrix: pages either on disk or in host RAM."""
-
-    store: PageStore | None
-    host_pages: list[EllpackPage] | None
-    row_offsets: list[int]
-    n_rows: int
-    num_features: int
-    stats: TransferStats
-
-    @property
-    def n_pages(self) -> int:
-        return len(self.row_offsets)
-
-    @property
-    def page_extents(self) -> list[tuple[int, int]]:
-        """(row_offset, n_rows) per page, derivable without touching the disk."""
-        ends = list(self.row_offsets[1:]) + [self.n_rows]
-        return [(ro, end - ro) for ro, end in zip(self.row_offsets, ends)]
-
-    def stream(
-        self,
-        prefetch_depth: int = 2,
-        staging_depth: int = 2,
-        cache: DevicePageCache | None = None,
-        put=None,
-    ) -> PageStream:
-        """One pass of the unified pipeline engine over this page set."""
-        common = dict(
-            to_array=_bins_to_host_array,
-            put=put or _put_bins,
-            stats=self.stats,
-            prefetch_depth=prefetch_depth,
-            staging_depth=staging_depth,
-            cache=cache,
-        )
-        if self.host_pages is not None:
-            return PageStream.from_host_pages(self.host_pages, **common)
-
-        def wrap(idx: int, arrays: dict) -> EllpackPage:
-            return EllpackPage(bins=arrays["bins"], row_offset=self.row_offsets[idx])
-
-        return PageStream.from_store(self.store, wrap, **common)
-
-    def iter_pages(self, prefetch_depth: int = 2) -> Iterator[tuple[int, EllpackPage]]:
-        """Host-side pass (no device staging); disk pages go through the prefetcher."""
-        yield from self.stream(prefetch_depth=prefetch_depth).iter_host()
-
-    def stage(self, page: EllpackPage) -> Array:
-        """Host -> device copy of one page ("CopyToGPU"); counted for the paging model."""
-        self.stats.host_to_device_bytes += page.nbytes
-        t0 = time.perf_counter()
-        out = _put_bins(_bins_to_host_array(page))
-        dt = time.perf_counter() - t0
-        # a lone synchronous put overlaps nothing: book equal stage and wall
-        # time so it cannot inflate overlap_ratio
-        self.stats.stream_stage_seconds += dt
-        self.stats.stream_wall_seconds += dt
-        return out
+    Older callers pass zero-arg closures; they still work, just without
+    per-node page skipping.
+    """
+    try:
+        sig = inspect.signature(make_stream)
+    except (TypeError, ValueError):  # builtins / odd callables
+        return False
+    for prm in sig.parameters.values():
+        if prm.kind is inspect.Parameter.VAR_KEYWORD or prm.name == "indices":
+            return True
+    return False
 
 
 def build_tree_paged(
@@ -140,6 +79,7 @@ def build_tree_paged(
     cut_ptrs=None,
     impl: str = "auto",
     hist_cache: HistogramCache | None = None,
+    page_skipping: bool = True,
 ) -> tuple[object, dict[int, Array]]:
     """Tree build over streamed pages (Alg. 6 core), either growth policy.
 
@@ -149,7 +89,7 @@ def build_tree_paged(
     popped frontier leaf — a per-node histogram pass in which every row
     outside the popped node's 2-child window (including the whole derive set,
     via the `node_map` kernel path) hits no bin. Shared by the single-device
-    `ExternalGradientBooster` streaming path and the sharded
+    streaming engine of `GradientBooster` and the sharded
     `distributed.grow_tree_distributed_paged` (which differ only in how the
     stream stages pages). Returns (tree, per-page positions keyed by stream
     index, in `page_extents` order).
@@ -157,18 +97,47 @@ def build_tree_paged(
     With histogram subtraction (the default) the stream pass only scatters
     rows belonging to *build* nodes — so each disk->host->device pass does
     roughly half the histogram work at depth >= 1.
+
+    Per-node page skipping (``page_skipping``, lossguide only): before a
+    popped node's histogram pass, pages none of whose rows sit inside the
+    node's 2-child window are dropped from the pass entirely — no disk fetch,
+    no host->device staging — and counted in ``stats.pages_skipped``. Needs a
+    ``make_stream`` accepting ``indices=``; zero-arg closures always stream
+    every page.
     """
     g_j, h_j = jnp.asarray(g), jnp.asarray(h)
     positions: dict[int, Array] = {
         i: jnp.zeros(nr, jnp.int32) for i, (_, nr) in enumerate(page_extents)
     }
+    skip_enabled = (
+        page_skipping and tp.grow_policy == "lossguide" and _accepts_indices(make_stream)
+    )
+
+    def start_stream(offset: int, window: int):
+        """One stream pass, restricted to pages with rows in the node window
+        when the caller supports subset passes (lossguide per-node passes)."""
+        if not skip_enabled or offset == 0:
+            return make_stream()
+        active = [
+            i
+            for i, (_, nr) in enumerate(page_extents)
+            if nr
+            and bool(jnp.any((positions[i] >= offset) & (positions[i] < offset + window)))
+        ]
+        if not active or len(active) == len(page_extents):
+            return make_stream()
+        stream = make_stream(indices=active)
+        stats = getattr(stream, "stats", None)
+        if stats is not None:
+            stats.pages_skipped += len(page_extents) - len(active)
+        return stream
 
     def hist_fn(offset: int, count: int, plan: LevelPlan) -> Array:
         # one double-buffered pass per level; page k+1 stages while page k's
         # histogram kernel runs
         return ops.build_histogram_paged(
-            make_stream(), g_j, h_j, positions, offset, plan.n_build, n_bins,
-            node_map=plan.node_map, impl=impl,
+            start_stream(offset, plan.count), g_j, h_j, positions, offset,
+            plan.n_build, n_bins, node_map=plan.node_map, impl=impl,
         )
 
     def partition_fn(feature, split_bin, default_left, is_leaf, count_level):
@@ -191,7 +160,20 @@ def build_tree_paged(
 
 
 class ExternalGradientBooster(GradientBooster):
-    """External-memory trainer; inherits predict/save/load from GradientBooster."""
+    """Deprecated alias for external-memory training.
+
+    The unified surface is::
+
+        dm = IterDMatrix(source, max_bin=..., cache_dir=...)
+        GradientBooster(params, policy=ExecutionPolicy(mode="out_of_core")).fit(dm)
+
+    This class keeps the historical ``(params, cache_dir=...)`` constructor
+    and ``fit(source)`` signature working: it builds the `IterDMatrix` from
+    the source on first use (``preprocess``) and forwards to the unified
+    engine with a forced out-of-core policy (which promotes to the Alg. 7
+    sampled path when the booster's `SamplingConfig` requests sampling —
+    exactly the old behavior). Emits a `FutureWarning` once per construction.
+    """
 
     def __init__(
         self,
@@ -207,66 +189,47 @@ class ExternalGradientBooster(GradientBooster):
         device_cache_pages: int | None = None,
         **kwargs,
     ):
-        super().__init__(params, **kwargs)
+        warnings.warn(
+            "ExternalGradientBooster is deprecated: use GradientBooster with "
+            "ExecutionPolicy (e.g. GradientBooster(params, policy=ExecutionPolicy("
+            "mode='out_of_core')).fit(IterDMatrix(source, cache_dir=...)))",
+            FutureWarning,
+            stacklevel=2,
+        )
+        policy = ExecutionPolicy(
+            mode="out_of_core",
+            prefetch_depth=prefetch_depth,
+            staging_depth=staging_depth,
+            device_cache_pages=device_cache_pages,
+            checkpoint_every=checkpoint_every,
+            checkpoint_dir=checkpoint_dir,
+        )
+        super().__init__(params, policy=policy, **kwargs)
         self.cache_dir = cache_dir
         self.page_bytes = page_bytes
-        self.prefetch_depth = prefetch_depth
-        self.staging_depth = staging_depth
         self.compress_pages = compress_pages
         self.stats = stats or GLOBAL_STATS
-        self.checkpoint_every = checkpoint_every
-        self.checkpoint_dir = checkpoint_dir
-        # None = auto: on the f<1 fast path, cache the page set on-device when
-        # it is small enough (pages are revisited once per iteration for the
-        # margin update); off for the f=1 streaming baseline so its measured
-        # re-stream traffic matches the paper's.
-        self.device_cache_pages = device_cache_pages
-        self._device_cache: DevicePageCache | None = None
-        self.pages: PageSet | None = None
-        self.labels_: np.ndarray | None = None
-        self.margins_: np.ndarray | None = None
-
-    def _stream(self, staging_depth: int | None = None) -> PageStream:
-        return self.pages.stream(
-            prefetch_depth=self.prefetch_depth,
-            staging_depth=staging_depth or self.staging_depth,
-            cache=self._device_cache,
-        )
+        self._dmatrix = None
 
     # ------------------------------------------------------------ preprocess
-    def preprocess(self, source) -> PageSet:
-        """Alg. 3 (incremental sketch) + Alg. 5 (external ELLPACK pages)."""
-        p = self.params
-        sketch = QuantileSketch(source.num_features, max_bin=min(p.max_bin, 255))
-        labels: list[np.ndarray] = []
-        for X_batch, y_batch in source.iter_batches():
-            sketch.update(X_batch)
-            labels.append(np.asarray(y_batch, np.float32))
-        self.cuts = sketch.finalize()
-        self.labels_ = np.concatenate(labels)
+    def preprocess(self, source, cuts=None):
+        """Alg. 3 (incremental sketch) + Alg. 5 (external ELLPACK pages).
+        Explicit ``cuts`` pin the quantization (checkpoint resume) and skip
+        the sketch pass."""
+        from repro.data.dmatrix import IterDMatrix
 
-        store = host_pages = None
-        row_offsets: list[int] = []
-        if self.cache_dir is not None:
-            store = PageStore(self.cache_dir, compress=self.compress_pages, stats=self.stats)
-        else:
-            host_pages = []
-        for page in create_ellpack_pages(
-            (X for X, _ in source.iter_batches()), self.cuts, self.page_bytes
-        ):
-            row_offsets.append(page.row_offset)
-            if store is not None:
-                store.write_page({"bins": page.bins}, {"row_offset": page.row_offset})
-            else:
-                host_pages.append(page)
-        self.pages = PageSet(
-            store=store,
-            host_pages=host_pages,
-            row_offsets=row_offsets,
-            n_rows=source.n_rows,
-            num_features=source.num_features,
+        self._dmatrix = IterDMatrix(
+            source,
+            max_bin=self.params.max_bin,
+            cuts=cuts,
+            cache_dir=self.cache_dir,
+            page_bytes=self.page_bytes,
+            compress=self.compress_pages,
             stats=self.stats,
         )
+        self.cuts = self._dmatrix.cuts
+        self.labels_ = self._dmatrix.labels
+        self.pages = self._dmatrix.page_set()
         return self.pages
 
     # ------------------------------------------------------------------ fit
@@ -278,151 +241,15 @@ class ExternalGradientBooster(GradientBooster):
         verbose: bool = False,
         start_iteration: int = 0,
     ) -> "ExternalGradientBooster":
-        p = self.params
-        # fresh ledger unless resuming mid-boosting (keep the run's totals)
-        if start_iteration == 0:
-            self.hist_cache = HistogramCache(enabled=p.hist_subtraction)
-        if self.pages is None:
+        if self._dmatrix is None:
             self.preprocess(source)
-        pages, labels = self.pages, self.labels_
-        n_bins = min(p.max_bin, 255)
-        bin_valid = bin_valid_from_cuts(self.cuts, n_bins)
-        labels_j = jnp.asarray(labels)
-
-        if self.margins_ is None:
-            self.base_margin_ = (
-                p.base_score if p.base_score is not None else self.objective.base_margin(labels)
-            )
-            self.margins_ = np.full(pages.n_rows, self.base_margin_, np.float32)
-
-        eval_bins = eval_labels = eval_margin = None
-        if eval_set is not None:
-            eval_bins = jnp.asarray(bin_batch(eval_set[0], self.cuts).astype(np.int32))
-            eval_labels = np.asarray(eval_set[1], np.float32)
-            eval_margin = jnp.full(eval_labels.shape[0], self.base_margin_, jnp.float32)
-            md = p.max_depth
-            for t in self.trees:  # resumed run: rebuild eval margins
-                eval_margin = eval_margin + p.learning_rate * predict_tree_bins(t, eval_bins, md)
-        metric_name = self._metric_name(eval_metric)
-
-        tp = p.tree_params()
-        use_sampling = p.sampling.method != "none" and (
-            p.sampling.method == "goss" or p.sampling.f < 1.0
+        return super().fit(
+            self._dmatrix,
+            eval_set=eval_set,
+            eval_metric=eval_metric,
+            verbose=verbose,
+            start_iteration=start_iteration,
         )
-        cache_pages = self.device_cache_pages
-        if cache_pages is None:
-            # auto: cache only when the whole page set fits (a sequential LRU
-            # scan over more pages than capacity evicts every page right
-            # before its reuse — zero hits), and only on the f<1 fast path
-            # where pages are revisited once per iteration.
-            fits = pages.n_pages <= 8
-            cache_pages = pages.n_pages if (use_sampling and fits) else 0
-        self._device_cache = DevicePageCache(cache_pages) if cache_pages > 0 else None
-        t0 = time.perf_counter()
-        for it in range(start_iteration, p.n_estimators):
-            g, h = self.objective.grad_hess(jnp.asarray(self.margins_), labels_j)
-            self._rng, k = jax.random.split(self._rng)
-            if use_sampling:
-                res = self._build_tree_sampled(k, g, h, n_bins, bin_valid, tp)
-            else:
-                res = self._build_tree_streaming(g, h, n_bins, bin_valid, tp)
-            self.trees.append(res.tree)
-            self._update_margins(res, tp)
-            if eval_bins is not None:
-                pred = predict_tree_bins(res.tree, eval_bins, tp.max_depth)
-                eval_margin = eval_margin + p.learning_rate * pred
-                val = self._eval(metric_name, eval_labels, eval_margin)
-                self.eval_history.append(
-                    EvalRecord(it, metric_name, val, time.perf_counter() - t0)
-                )
-                if verbose:
-                    print(f"[{it}] {metric_name}={val:.6f}")
-            if (
-                self.checkpoint_every
-                and self.checkpoint_dir
-                and (it + 1) % self.checkpoint_every == 0
-            ):
-                self.save(self.checkpoint_dir)
-        return self
-
-    # -------------------------------------------------- Alg. 7 (sampled path)
-    def _sampled_capacity(self, n_rows: int) -> int:
-        """Static compacted-page capacity: keeps jit shapes stable across
-        iterations (Bernoulli sampling varies the kept count slightly)."""
-        f = self.params.sampling.f if self.params.sampling.method != "goss" else (
-            self.params.sampling.goss_a + self.params.sampling.goss_b
-        )
-        cap = int(n_rows * min(1.0, f * 1.25)) + 256
-        return min(n_rows, -(-cap // 1024) * 1024)
-
-    def _build_tree_sampled(self, key, g, h, n_bins, bin_valid, tp) -> TreeBuildResult:
-        p = self.params
-        mask, w = sample(key, g, h, p.sampling)
-        mask_np = np.asarray(mask)
-        sel = np.nonzero(mask_np)[0]
-        capacity = self._sampled_capacity(self.pages.n_rows)
-        if len(sel) > capacity:  # extreme tail: drop lowest-weight extras
-            sel = sel[:capacity]
-        gw = np.asarray(g * w)
-        hw = np.asarray(h * w)
-
-        # Compact: gather sampled rows from every page into one device page
-        # (host-side pass: the prefetcher overlaps disk reads, nothing staged)
-        chunks: list[np.ndarray] = []
-        for _, page in self._stream().iter_host():
-            lo = np.searchsorted(sel, page.row_offset, side="left")
-            hi = np.searchsorted(sel, page.row_offset + page.n_rows, side="left")
-            if hi > lo:
-                local = sel[lo:hi] - page.row_offset
-                chunks.append(page.bins[local])
-        bins_np = np.concatenate(chunks, axis=0) if chunks else np.zeros(
-            (0, self.pages.num_features), np.uint8
-        )
-        pad = capacity - bins_np.shape[0]
-        g_np = np.zeros(capacity, np.float32)
-        h_np = np.zeros(capacity, np.float32)
-        g_np[: len(sel)] = gw[sel]
-        h_np[: len(sel)] = hw[sel]
-        if pad:  # zero-gradient padding rows: no histogram contribution
-            bins_np = np.concatenate(
-                [bins_np, np.zeros((pad, bins_np.shape[1]), np.uint8)], axis=0
-            )
-        staged = EllpackPage(bins_np, 0)
-        bins_c = self.pages.stage(staged)
-        res = grow_tree(
-            bins_c, jnp.asarray(g_np), jnp.asarray(h_np), n_bins, bin_valid, tp,
-            cut_values=self.cuts.values, cut_ptrs=self.cuts.ptrs,
-            impl=p.kernel_impl, hist_cache=self.hist_cache,
-        )
-        # positions only cover sampled rows -> margin update must stream pages
-        return TreeBuildResult(tree=res.tree, positions=None)
-
-    # ----------------------------------------------- Alg. 6 (streaming path)
-    def _build_tree_streaming(self, g, h, n_bins, bin_valid, tp) -> TreeBuildResult:
-        pages = self.pages
-        extents = pages.page_extents
-        tree, positions = build_tree_paged(
-            self._stream, extents, g, h, n_bins, bin_valid, tp,
-            self.cuts.values, self.cuts.ptrs, impl=self.params.kernel_impl,
-            hist_cache=self.hist_cache,
-        )
-        # final positions point at leaves: margin update without re-streaming
-        pos_full = np.empty(pages.n_rows, np.int32)
-        for i, (ro, nr) in enumerate(extents):
-            pos_full[ro : ro + nr] = np.asarray(positions[i])
-        return TreeBuildResult(tree=tree, positions=jnp.asarray(pos_full))
-
-    # -------------------------------------------------------- margin update
-    def _update_margins(self, res: TreeBuildResult, tp) -> None:
-        lr = self.params.learning_rate
-        if res.positions is not None:  # streaming path: positions are leaves
-            leaf = np.asarray(res.tree.leaf_value)
-            self.margins_ += lr * leaf[np.asarray(res.positions)]
-            return
-        for sp in self._stream():
-            pred = predict_tree_bins(res.tree, sp.device, tp.max_depth)
-            sl = slice(sp.host.row_offset, sp.host.row_offset + sp.host.n_rows)
-            self.margins_[sl] += lr * np.asarray(pred)
 
     # -------------------------------------------------------------- restart
     @classmethod
@@ -431,15 +258,15 @@ class ExternalGradientBooster(GradientBooster):
     ) -> "ExternalGradientBooster":
         """Restart from a checkpoint: reload forest, rebuild margins by streaming."""
         base = GradientBooster.load(checkpoint_path)
-        self = cls(base.params, cache_dir=cache_dir, **kw)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", FutureWarning)  # resume implies the alias
+            self = cls(base.params, cache_dir=cache_dir, **kw)
         self.trees = base.trees
-        self.cuts = base.cuts
         self.base_margin_ = base.base_margin_
         self._rng = base._rng
-        # rebuild pages + margin cache deterministically from the source
-        self.preprocess(source)
-        # preprocess() re-derives cuts; restore the checkpointed ones (bit-exact)
-        self.cuts = base.cuts
+        # rebuild pages + margin cache from the source, quantized with the
+        # checkpointed cuts (bit-exact thresholds, no re-sketch)
+        self.preprocess(source, cuts=base.cuts)
         self.margins_ = np.full(self.pages.n_rows, self.base_margin_, np.float32)
         md = self.params.max_depth
         for tree in self.trees:

@@ -1,13 +1,27 @@
+from repro.data.dmatrix import (
+    ArrayDMatrix,
+    DMatrix,
+    IterDMatrix,
+    PagedDMatrix,
+    PageSet,
+    as_dmatrix,
+)
+from repro.data.pages import PageStore, Prefetcher, TransferStats
 from repro.data.synthetic import (
-    SyntheticSource,
     ArraySource,
+    SyntheticSource,
     make_classification,
     make_higgs_like,
     make_regression,
 )
-from repro.data.pages import PageStore, Prefetcher, TransferStats
 
 __all__ = [
+    "ArrayDMatrix",
+    "DMatrix",
+    "IterDMatrix",
+    "PagedDMatrix",
+    "PageSet",
+    "as_dmatrix",
     "SyntheticSource",
     "ArraySource",
     "make_classification",

@@ -45,6 +45,9 @@ class TransferStats:
     stream_wall_seconds: float = 0.0  # end-to-end elapsed across passes
     cache_hits: int = 0  # device-page cache hits (transfers skipped)
     cache_hit_bytes: int = 0  # host->device bytes those hits saved
+    # pages never fetched/staged because a per-node lossguide pass proved no
+    # row of theirs sits in the popped node's window (see build_tree_paged)
+    pages_skipped: int = 0
 
     @property
     def stream_serial_seconds(self) -> float:
@@ -74,6 +77,7 @@ class TransferStats:
         self.stream_wall_seconds = 0.0
         self.cache_hits = 0
         self.cache_hit_bytes = 0
+        self.pages_skipped = 0
 
 
 GLOBAL_STATS = TransferStats()

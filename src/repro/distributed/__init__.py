@@ -1,6 +1,8 @@
 from repro.distributed.gbdt_shard import (
     DistConfig,
+    check_feature_parallel_lossguide,
     distributed_train_step,
+    fit_sharded,
     grow_tree_distributed,
     grow_tree_distributed_paged,
     make_gbdt_step_fn,
@@ -9,7 +11,9 @@ from repro.distributed.gbdt_shard import (
 
 __all__ = [
     "DistConfig",
+    "check_feature_parallel_lossguide",
     "distributed_train_step",
+    "fit_sharded",
     "grow_tree_distributed",
     "grow_tree_distributed_paged",
     "make_gbdt_step_fn",

@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Callable, Sequence
 
 import jax
@@ -99,6 +100,21 @@ class DistConfig:
         if self.max_leaves is not None:
             kw["max_leaves"] = self.max_leaves
         return dataclasses.replace(tp, **kw) if kw else tp
+
+
+def check_feature_parallel_lossguide(tp: TreeParams, cfg: DistConfig) -> None:
+    """Feature-parallel + lossguide is an unimplemented combination; fail fast
+    with an actionable message instead of a mid-build shard_map error."""
+    if tp.grow_policy == "lossguide" and cfg.feature_axis is not None:
+        raise NotImplementedError(
+            f"feature-parallel lossguide growth is not implemented: DistConfig("
+            f"feature_axis={cfg.feature_axis!r}, grow_policy='lossguide') would "
+            "need the host-driven best-first frontier to all-gather per-node "
+            "split candidates across feature shards on every pop. Either drop "
+            "feature_axis (row-parallel lossguide is supported) or use "
+            "grow_policy='depthwise' (feature-parallel split search is "
+            "depthwise-only). Tracked as a ROADMAP open item."
+        )
 
 
 def _psum_hist(hist: Array, cfg: DistConfig) -> Array:
@@ -321,11 +337,7 @@ def _grow_tree_distributed_lossguide(
     parent. Row counts psum once per pop to keep the build/derive choice
     identical on every shard (and to the single-device builder's).
     """
-    if cfg.feature_axis is not None:
-        raise NotImplementedError(
-            "lossguide growth composes with row sharding only; feature-parallel "
-            "split search is depthwise-only"
-        )
+    check_feature_parallel_lossguide(tp, cfg)
     bins_spec = P(cfg.data_axes, None)
     vec_spec = P(cfg.data_axes)
     rep = P()
@@ -475,6 +487,7 @@ def grow_tree_distributed(
 ):
     """Build one tree with rows/features sharded over the mesh."""
     tp = cfg.resolve_tree_params(tp)
+    check_feature_parallel_lossguide(tp, cfg)
     if tp.grow_policy == "lossguide":
         return _grow_tree_distributed_lossguide(
             mesh, bins, g, h, n_bins, bin_valid, tp, cfg, cut_values, cut_ptrs
@@ -522,6 +535,7 @@ def grow_tree_distributed_paged(
     cfg: DistConfig,
     cut_values=None,
     cut_ptrs=None,
+    page_skipping: bool = True,
 ) -> tuple[TreeArrays, Array]:
     """Out-of-core distributed build: one tree over pages that never all sit
     in device memory, rows of each staged page sharded over `cfg.data_axes`.
@@ -538,18 +552,133 @@ def grow_tree_distributed_paged(
     either `cfg` or `tp` disables it) shrinks every per-page histogram pass to
     the build half of the level. With ``grow_policy="lossguide"`` (from `cfg`
     or `tp`) the paged build runs best-first: one stream pass per popped leaf,
-    each page's scatter covering only the popped node's built child.
+    each page's scatter covering only the popped node's built child — and when
+    ``make_stream`` accepts an ``indices=`` kwarg (forward it to
+    ``PageSet.stream`` / ``PageStream.from_host_pages``), pages with no row in
+    the popped node's window are skipped outright (``page_skipping``; skips
+    land in ``TransferStats.pages_skipped``).
     """
     from repro.core.outofcore import build_tree_paged
 
     tp = cfg.resolve_tree_params(tp)
+    check_feature_parallel_lossguide(tp, cfg)
     cache = HistogramCache(enabled=cfg.hist_subtraction and tp.hist_subtraction)
     tree, positions = build_tree_paged(
         make_stream, list(page_extents), g, h, n_bins, bin_valid, tp,
         cut_values, cut_ptrs, impl=cfg.kernel_impl, hist_cache=cache,
+        page_skipping=page_skipping,
     )
     pos_full = jnp.concatenate([positions[i] for i in range(len(page_extents))])
     return tree, pos_full
+
+
+def fit_sharded(
+    mesh: Mesh,
+    data,
+    y=None,
+    *,
+    params=None,
+    cfg: DistConfig | None = None,
+    eval_set=None,
+    eval_metric: str = "auto",
+    verbose: bool = False,
+    **kwargs,
+):
+    """Train a whole forest with rows (and optionally features) sharded over
+    ``mesh`` — the distributed front door of the unified DMatrix surface.
+
+    ``data`` is anything `GradientBooster.fit` accepts: a `DMatrix`
+    (ArrayDMatrix / IterDMatrix / PagedDMatrix — its cuts/labels are used
+    as-is, so a distributed fit of the same matrix matches the single-device
+    forest up to f32 ties), raw ``(X, y)`` ndarrays, or a batch source.
+    ``params`` is the same `BoosterParams` as everywhere else (extra
+    ``**kwargs`` construct one); `BoosterParams.tree_params()` stays the
+    single TreeParams derivation point, with `DistConfig` growth overrides
+    applied on top. Returns a fitted `GradientBooster` (predict / save /
+    get_params all work).
+
+    The quantized matrix is staged once, row-sharded over ``cfg.data_axes``
+    (features over ``cfg.feature_axis`` when set); each boosting round builds
+    one tree via `grow_tree_distributed` (histogram psum = the paper's §2.2
+    AllReduce) and updates the replicated margin from the sharded positions.
+    """
+    from repro.core.booster import BoosterParams, GradientBooster, bin_valid_from_cuts
+    from repro.core.policy import ExecutionPolicy
+    from repro.core.sampling import sample
+    from repro.data.dmatrix import as_dmatrix
+
+    cfg = cfg or DistConfig()
+    if params is None:
+        params = BoosterParams(**kwargs)
+    elif kwargs:
+        params = dataclasses.replace(params, **kwargs)
+    tp = cfg.resolve_tree_params(params.tree_params())
+    check_feature_parallel_lossguide(tp, cfg)
+
+    dm = as_dmatrix(data, y, max_bin=params.max_bin)
+    labels = dm.require_labels()
+    n_shards = int(np.prod([mesh.shape[a] for a in cfg.data_axes]))
+    if dm.n_rows % n_shards:
+        raise ValueError(
+            f"n_rows={dm.n_rows} must divide evenly over the data axes "
+            f"{cfg.data_axes} ({n_shards} shards); pad or trim the DMatrix"
+        )
+    if cfg.feature_axis is not None and dm.num_features % mesh.shape[cfg.feature_axis]:
+        raise ValueError(
+            f"num_features={dm.num_features} must divide evenly over "
+            f"feature_axis {cfg.feature_axis!r} ({mesh.shape[cfg.feature_axis]} shards)"
+        )
+
+    booster = GradientBooster(params, policy=ExecutionPolicy(mode="in_core"))
+    booster.cuts = dm.cuts
+    n_bins = dm.n_bins
+    bin_valid = bin_valid_from_cuts(dm.cuts, n_bins)
+    bins = jax.device_put(
+        dm.single_page_bins().astype(np.int32),
+        NamedSharding(mesh, P(cfg.data_axes, cfg.feature_axis)),
+    )
+    labels_j = jnp.asarray(labels)
+    booster.base_margin_ = (
+        params.base_score
+        if params.base_score is not None
+        else booster.objective.base_margin(labels)
+    )
+    margin = jnp.full(labels.shape[0], booster.base_margin_, jnp.float32)
+
+    eval_bins = eval_labels = eval_margin = None
+    if eval_set is not None:
+        from repro.core.ellpack import bin_batch
+
+        eval_bins = jnp.asarray(bin_batch(eval_set[0], dm.cuts).astype(np.int32))
+        eval_labels = np.asarray(eval_set[1], np.float32)
+        eval_margin = jnp.full(eval_labels.shape[0], booster.base_margin_, jnp.float32)
+    metric_name = booster._metric_name(eval_metric)
+
+    from repro.core.booster import EvalRecord
+    from repro.core.tree import predict_tree_bins
+
+    t0 = time.perf_counter()
+    for it in range(params.n_estimators):
+        g, h = booster.objective.grad_hess(margin, labels_j)
+        booster._rng, k = jax.random.split(booster._rng)
+        mask, w = sample(k, g, h, params.sampling)
+        scale = jnp.where(mask, w, 0.0)
+        tree, positions = grow_tree_distributed(
+            mesh, bins, g * scale, h * scale, n_bins, bin_valid,
+            params.tree_params(), cfg, dm.cuts.values, dm.cuts.ptrs,
+        )
+        booster.trees.append(tree)
+        margin = margin + params.learning_rate * tree.leaf_value[positions]
+        if eval_bins is not None:
+            pred = predict_tree_bins(tree, eval_bins, tp.max_depth)
+            eval_margin = eval_margin + params.learning_rate * pred
+            val = booster._eval(metric_name, eval_labels, eval_margin)
+            booster.eval_history.append(
+                EvalRecord(it, metric_name, val, time.perf_counter() - t0)
+            )
+            if verbose:
+                print(f"[{it}] {metric_name}={val:.6f}")
+    return booster
 
 
 def distributed_train_step(*args, **kwargs):

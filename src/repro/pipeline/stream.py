@@ -101,10 +101,16 @@ class PageStream:
 
     # ------------------------------------------------------------ constructors
     @classmethod
-    def from_host_pages(cls, pages: Sequence[Any], **kw) -> "PageStream":
-        """Stream pages already resident in host RAM (no prefetch thread)."""
+    def from_host_pages(
+        cls, pages: Sequence[Any], indices: Iterable[int] | None = None, **kw
+    ) -> "PageStream":
+        """Stream pages already resident in host RAM (no prefetch thread).
+
+        ``indices`` restricts the pass to a subset while keeping each page's
+        global index (page-skipping passes stay keyed consistently).
+        """
         kw.setdefault("threaded", False)
-        return cls(pages.__getitem__, range(len(pages)), **kw)
+        return cls(pages.__getitem__, indices if indices is not None else range(len(pages)), **kw)
 
     @classmethod
     def from_store(
