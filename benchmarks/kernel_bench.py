@@ -20,17 +20,29 @@ from repro.kernels import ops
 
 
 def _bench(fn, *args, iters=10) -> float:
+    """us per call: min over ``iters`` timed calls (each blocked), after a
+    warmup call. The min is the standard robust estimator for shared-host
+    microbenchmarks — a mean over few iterations is dominated by scheduler
+    noise and GC pauses, not the kernel."""
     fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+    best = float("inf")
     for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
 
 
 def _subtraction_rows(quick: bool) -> tuple[str, dict]:
     """Histogram subtraction trick: per-tree built-vs-derived node ledger and
-    wall-clock, full build vs build-smaller-child + derive-sibling."""
+    wall-clock, full build vs build-smaller-child + derive-sibling.
+
+    The scale-free ``node_rows_ratio`` is the gated signal (nightly floor
+    1.5x): the CPU oracle's scatter cost is dominated by n_rows, not by how
+    many node histograms are materialized, so the wall-clock ``speedup``
+    column hovers around 1.0x on this host and swings with machine state —
+    the real wins (halved per-page scatter, halved psum payload) show on the
+    streaming/distributed paths, not this in-core microbench."""
     rng = np.random.default_rng(1)
     n, m, B, depth = (8192 if quick else 32768), 16, 32, 6
     bins = jnp.asarray(rng.integers(0, B, (n, m)).astype(np.int32))

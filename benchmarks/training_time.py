@@ -20,10 +20,17 @@ Two ``policy_*`` rows exercise the unified DMatrix surface: the same
 `IterDMatrix` trained with ``ExecutionPolicy(mode="auto")`` under a budget
 that forces the decision procedure off-device, against the explicitly forced
 ``mode="out_of_core"`` — the forests are bit-identical (auc_delta=0.000000).
+
+The ``gpu_deep_tree_spill`` pair exercises the tiered `HistogramStore`:
+depth-12 lossguide under a 4-histogram ``hist_budget_bytes`` (cold frontier
+histograms spill to host and stage back through `PageStream`) vs the same
+config with the store unlimited — spill count in the derived column, AUC
+delta pinned to 0.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 from benchmarks.common import (
@@ -89,6 +96,11 @@ def main(
         extra = f"auc={a:.4f}"
         if stats is not None:
             extra += f" overlap={stats.overlap_ratio:.2f}"
+        if stats is not None and stats.hist_spills:  # tiered-store ledger
+            results[mode]["hist_spills"] = stats.hist_spills
+            results[mode]["hist_spill_mib"] = round(stats.hist_spill_bytes / 2**20, 2)
+            results[mode]["hist_fetches"] = stats.hist_fetches
+            extra += f" hist_spills={stats.hist_spills}"
         hc = getattr(booster, "hist_cache", None)
         if hc is not None and hc.stats.levels:  # subtraction ledger (all trees)
             results[mode]["hist_built_nodes"] = hc.stats.built_nodes
@@ -127,6 +139,31 @@ def main(
         )
         b.fit(dm)
         return b, stats
+
+    # --- deep-tree histogram spill: depth 12 lossguide under a tight
+    # hist_budget_bytes vs the same config with the store unlimited. Spilling
+    # moves retained histograms to host (spill count in the derived column);
+    # it must not change what the model learns (auc_delta row below).
+    def deep(budget):
+        def run():
+            p = dataclasses.replace(
+                _params(grow_policy="lossguide", max_leaves=64), max_depth=12
+            )
+            b = GradientBooster(
+                p, policy=ExecutionPolicy(mode="in_core", hist_budget_bytes=budget)
+            )
+            b.fit(X, y)
+            return b, b.stats
+
+        return run
+
+    from repro.core import DeviceMemoryModel
+
+    node_hist_bytes = DeviceMemoryModel(
+        num_features=X.shape[1], max_bin=MAX_BIN
+    ).hist_node_bytes  # one frontier histogram
+    record("gpu_deep_tree_spill", deep(4 * node_hist_bytes))
+    record("gpu_deep_tree_unlimited", deep(None))
 
     record("gpu_out_of_core_f1.0", lambda: ooc(None))
     record("gpu_out_of_core_f1.0_fullbuild", lambda: ooc(None, hist_subtraction=False))
@@ -204,6 +241,24 @@ def main(
     }
     out_rows.append(
         csv_row(f"table2_{grow_policy}_auc_delta", 0.0, f"auc_delta={lg_delta:.6f}")
+    )
+
+    # the tiered store must be invisible to the learned model: depth-12
+    # lossguide with a 4-histogram device budget == unlimited budget
+    deep_delta = abs(raw_auc["gpu_deep_tree_spill"] - raw_auc["gpu_deep_tree_unlimited"])
+    results["deep_tree_spill"] = {
+        "max_depth": 12,
+        "hist_budget_bytes": 4 * node_hist_bytes,
+        "hist_spills": results["gpu_deep_tree_spill"].get("hist_spills", 0),
+        "auc_delta_vs_unlimited": round(deep_delta, 6),
+        "auc_match_1e-3": bool(deep_delta <= 1e-3),
+    }
+    out_rows.append(
+        csv_row(
+            "table2_deep_tree_spill_auc_delta", 0.0,
+            f"auc_delta={deep_delta:.6f} "
+            f"spills={results['deep_tree_spill']['hist_spills']}",
+        )
     )
 
     results["paper_table2"] = {

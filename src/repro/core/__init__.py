@@ -10,7 +10,7 @@ from repro.core.ellpack import (
     create_ellpack_inmemory,
     create_ellpack_pages,
 )
-from repro.core.histcache import HistCacheStats, HistogramCache, LevelPlan
+from repro.core.histcache import HistCacheStats, HistogramCache, HistogramStore, LevelPlan
 from repro.core.memory import DeviceMemoryModel
 from repro.core.objectives import LOGISTIC, SQUARED_ERROR, get_objective
 from repro.core.outofcore import ExternalGradientBooster, build_tree_paged
@@ -50,6 +50,7 @@ __all__ = [
     "build_tree_paged",
     "HistCacheStats",
     "HistogramCache",
+    "HistogramStore",
     "LevelPlan",
     "LOGISTIC",
     "SQUARED_ERROR",

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import objectives as obj_lib
-from repro.core.histcache import HistogramCache
+from repro.core.histcache import HistogramStore
 from repro.core.policy import ExecutionDecision, ExecutionPolicy, sampling_requested
 from repro.core.quantile import HistogramCuts
 from repro.core.sampling import SamplingConfig, sample
@@ -38,6 +38,7 @@ from repro.core.tree import (
     predict_tree_bins,
     stack_trees,
 )
+from repro.data.pages import TransferStats
 
 Array = jax.Array
 
@@ -156,8 +157,10 @@ class GradientBooster:
         self.cuts: HistogramCuts | None = None
         self.base_margin_: float = 0.0
         self.eval_history: list[EvalRecord] = []
-        # build-vs-derive ledger accumulated over every tree of the last fit
-        self.hist_cache = HistogramCache(enabled=params.hist_subtraction)
+        # build-vs-derive ledger accumulated over every tree of the last fit;
+        # the policy's hist_budget_bytes / hist_retained_levels knobs make
+        # this the tiered store (cold histograms spill to host)
+        self.hist_cache = self._make_hist_store()
         self._rng = jax.random.PRNGKey(params.seed)
         self.decision_: ExecutionDecision | None = None
         # external-mode state (filled when the decision routes off-device)
@@ -166,6 +169,17 @@ class GradientBooster:
         self.labels_: np.ndarray | None = None
         self.margins_: np.ndarray | None = None
         self._device_cache = None
+
+    def _make_hist_store(self, transfer_stats=None) -> HistogramStore:
+        """Fresh tiered histogram store wired to this booster's policy knobs.
+        ``transfer_stats`` shares the spill/fetch ledger with page traffic
+        (external fits pass the page set's stats)."""
+        return HistogramStore(
+            enabled=self.params.hist_subtraction,
+            budget_bytes=self.policy.hist_budget_bytes,
+            retained_levels=self.policy.hist_retained_levels,
+            transfer_stats=transfer_stats,
+        )
 
     # ---------------------------------------------------------- sklearn compat
     def get_params(self, deep: bool = True) -> dict:
@@ -218,7 +232,7 @@ class GradientBooster:
         if nested["policy"]:
             self.policy = dataclasses.replace(self.policy, **nested["policy"])
         self.objective = obj_lib.get_objective(self.params.objective)
-        self.hist_cache = HistogramCache(enabled=self.params.hist_subtraction)
+        self.hist_cache = self._make_hist_store()
         self._rng = jax.random.PRNGKey(self.params.seed)
         return self
 
@@ -263,8 +277,17 @@ class GradientBooster:
                 f"{len(self.trees)} trees; resume with start_iteration == len(trees)"
             )
         if start_iteration == 0:
-            # fresh ledger: stats cover exactly this fit() call
-            self.hist_cache = HistogramCache(enabled=p.hist_subtraction)
+            # fresh ledger: stats cover exactly this fit() call; in-core fits
+            # get their own TransferStats so histogram spill/fetch traffic is
+            # still observable (self.stats)
+            self.stats = TransferStats()
+            self.hist_cache = self._make_hist_store(self.stats)
+        else:
+            # resumed boosting keeps the store (and its accumulated ledger)
+            # but must not record into a detached private sink
+            if self.stats is None:
+                self.stats = TransferStats()
+            self.hist_cache.transfer_stats = self.stats
         labels = dm.require_labels()
         n_bins = dm.n_bins
         bin_valid = bin_valid_from_cuts(dm.cuts, n_bins)
@@ -356,13 +379,18 @@ class GradientBooster:
         from repro.pipeline import DevicePageCache
 
         p, pol = self.params, self.policy
-        # fresh ledger unless resuming mid-boosting (keep the run's totals)
-        if start_iteration == 0:
-            self.hist_cache = HistogramCache(enabled=p.hist_subtraction)
         labels = dm.require_labels()
         pages = dm.page_set()
         self.pages = pages
         self.stats = pages.stats
+        # fresh ledger unless resuming mid-boosting (keep the run's totals);
+        # histogram spills/fetches land in the page set's TransferStats so one
+        # ledger carries all device-boundary traffic — resumed stores are
+        # rewired to it (their __init__ sink is a detached placeholder)
+        if start_iteration == 0:
+            self.hist_cache = self._make_hist_store(pages.stats)
+        else:
+            self.hist_cache.transfer_stats = pages.stats
         self.labels_ = labels
         n_bins = dm.n_bins
         bin_valid = bin_valid_from_cuts(dm.cuts, n_bins)

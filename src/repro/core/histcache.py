@@ -1,4 +1,4 @@
-"""Histogram subtraction cache (Mitchell et al.'s GPU GBDT optimization).
+"""Tiered histogram store (subtraction cache + budget-aware device/host tiers).
 
 Every split partitions a parent node's rows into its two children, and the
 gradient histogram is additive over rows, so
@@ -11,7 +11,47 @@ pair — the sibling is derived as ``parent - built``. This roughly halves the
 dominant BuildHistograms cost (and, in the out-of-core builder, the per-page
 scatter work of every disk->host->device pass).
 
-`HistogramCache` owns that machinery for all three builders:
+The retained histograms are themselves a device-memory liability: at depth d
+the previous level holds ``2^(d-1) * m * n_bins * 2 * 4`` bytes, which at
+depth >= 10 rivals the ELLPACK matrix the paper's Table-1 budget tracks.
+`HistogramStore` therefore manages them as a *tiered*, byte-budgeted store:
+
+  device tier   hot histograms, ready for subtraction (``budget_bytes`` caps
+                this tier; None = unlimited — bit-for-bit the old cache);
+  host tier     cold histograms spilled off-device (a synchronous
+                ``device_get`` into host RAM — overlapping the eviction with
+                the next build pass is an open item); a plan that needs one
+                back stages it through the same `repro.pipeline.PageStream`
+                engine the ELLPACK pages use, so the fetch leg shares the
+                pages' staging ledger (the round trip is accounted in
+                `TransferStats.hist_spill_bytes` / ``hist_fetch_bytes`` next
+                to the page traffic);
+  ancestors     with ``retained_levels=K >= 2``, up to K-1 generations of
+                expanded parents are retired on-device instead of evicted, so
+                a popped node whose own histogram was spilled can be derived
+                as ``ancestor - sum(built siblings along the path)`` without
+                any transfer (multi-level subtraction) — and only rebuilt
+                from rows when no tier can resolve it.
+
+Every `plan`/`plan_node` therefore runs an explicit resolution step, recorded
+on the returned ``LevelPlan.source``:
+
+  "build"    full build from rows (root, store disabled, nothing resolvable)
+  "device"   parent histogram device-resident: classic subtraction
+  "fetched"  parent was spilled; staged back from the host tier (bit-exact)
+  "derived"  parent reconstructed from a device-resident ancestor chain
+             (exact up to f32 accumulation order)
+
+Eviction order under budget pressure: depthwise holds exactly one level
+entry (the next plan's parent — older levels have no read path and are
+dropped free the moment the next level lands), so levels leave the device in
+level order as the build descends past the budget; best-first growth spills
+frontier-node entries lowest-gain-first (LRU by frontier gain — low-gain
+leaves are popped last, if ever). Retired node ancestors are dropped (not
+spilled) only after every spillable entry left the device: they exist to
+save transfers, and are re-derivable.
+
+`HistogramStore` owns that machinery for all three builders:
 
   plan(count, level_counts)  partition the level's nodes into a *build* set
                              (smaller child of each pair, by row count from
@@ -21,11 +61,11 @@ scatter work of every disk->host->device pass).
                              derive nodes — their rows contribute to no bin)
   expand(plan, built)        reconstruct the full level histogram from the
                              compact build histogram and the cached previous
-                             level (``derived = parent - built``), then cache
-                             it for the next level
+                             level (``derived = parent - built``), then store
+                             it for the next level (spilling per the budget)
 
 Best-first (lossguide) growth uses the per-node sibling API instead: the
-frontier pops one leaf at a time, so histograms are cached per heap node id
+frontier pops one leaf at a time, so histograms are stored per heap node id
 rather than per level:
 
   put_node(node, hist)            retain one node's (m, n_bins, 2) histogram
@@ -34,20 +74,24 @@ rather than per level:
                                   parent's children: build only the smaller
                                   child (ties build left, same rule as the
                                   level plan) and derive the sibling from the
-                                  cached parent histogram
-  expand_node(parent, plan, built)  reconstruct both children, cache them as
-                                  new frontier nodes, evict the parent
+                                  resolved parent histogram
+  expand_node(parent, plan, built)  reconstruct both children, store them as
+                                  new frontier nodes, retire (K >= 2) or
+                                  evict the parent
+  note_gain(node, gain)           record the frontier gain that orders spills
   discard_node(node)              drop a node that left the frontier (became
                                   a permanent leaf)
 
-At most one histogram per frontier leaf is retained, so the per-node cache
-holds <= max_leaves entries.
+At most one histogram per frontier leaf is retained (plus <= K-1 retired
+ancestors per path), so the per-node store holds <= max_leaves hot entries.
 
 The node choice uses exact row counts (`level_row_counts` over the positions
 produced by RepartitionInstances), so every builder — in-core, paged
 out-of-core, and distributed — makes identical build/derive decisions and the
 resulting trees match the full-build baseline bit-for-bit up to f32
-accumulation order.
+accumulation order. The distributed builders drive one host-side store over
+psum'd histograms and row counts, so spill decisions are made once, from
+state every shard shares.
 
 Shapes stay static under jit: at depth >= 1 exactly ``count // 2`` slots are
 built (dead pairs — parent did not split — waste a slot holding zeros; their
@@ -62,21 +106,30 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pages import TransferStats
 
 Array = jax.Array
 
+_HOT = float("inf")  # priority of entries whose frontier gain is not yet known
+
 
 class LevelPlan(NamedTuple):
-    """Build/derive split of one tree level's nodes.
+    """Build/derive split of one node window, plus how the parent resolved.
 
     ``node_map`` is None for a full build (root level, cache disabled, or no
     counts yet); otherwise ``node_map[j]`` maps level-local node j to its
     compacted build slot, or -1 if j's histogram is derived by subtraction.
+    ``source`` records the resolution step: "build" (full rebuild from rows),
+    "device" (parent hot), "fetched" (parent staged back from the host tier),
+    or "derived" (parent reconstructed from a device ancestor chain).
     """
 
     node_map: Array | None  # (count,) int32, or None = build everything
     n_build: int  # static: number of histogram slots the kernel materializes
     count: int  # static: nodes at this level
+    source: str = "build"
 
 
 @dataclasses.dataclass
@@ -91,6 +144,12 @@ class HistCacheStats:
     levels: int = 0
     built_nodes: int = 0
     derived_nodes: int = 0
+    # parent histograms reconstructed from an ancestor chain (multi-level
+    # subtraction) instead of a host fetch or a row rebuild
+    chain_derived_nodes: int = 0
+    # per-node plans that fell back to a full rebuild because no tier could
+    # resolve the parent histogram
+    rebuilt_nodes: int = 0
     _built_rows_acc: Array | None = dataclasses.field(default=None, repr=False)
     _total_rows_acc: Array | None = dataclasses.field(default=None, repr=False)
 
@@ -163,38 +222,180 @@ def expand_level(parent_hist: Array, built: Array, build_left: Array) -> Array:
     return jnp.stack([left, right], axis=1).reshape((2 * pairs,) + built.shape[1:])
 
 
+class HistogramStore:
+    """Byte-budgeted, tiered retention of per-node histograms, and the
+    build/derive planner for the next level or popped node.
 
+    One instance per tree (or per forest — `reset` is called at the start of
+    every driver run and clears the tiered state but keeps the accumulated
+    `stats` and `transfer_stats`).
 
-class HistogramCache:
-    """Retains the previous level's full per-node histograms and plans the
-    build/derive node split for the next one. One instance per tree (or per
-    forest — `reset` is called at the start of every `grow_tree_generic` and
-    clears the level state but keeps the accumulated `stats`)."""
+    Parameters
+    ----------
+    enabled : subtraction on/off (off = every plan is a full build).
+    budget_bytes : device-tier byte budget. None = unlimited (the store
+        degenerates bit-for-bit to the pre-tiered subtraction cache); 0 =
+        everything spills to the host tier and every plan fetches.
+    retained_levels : K >= 1. The best-first ancestor-chain depth: up to K-1
+        generations of retired parents stay device-resident per path for
+        transfer-free chain derivation. Depthwise always retains exactly the
+        parent level (nothing reads older levels), so K only shapes per-node
+        growth.
+    transfer_stats : `TransferStats` sink for spill/fetch bytes (shares the
+        page-traffic ledger when the caller passes the page set's stats).
+    """
 
-    def __init__(self, enabled: bool = True):
+    def __init__(
+        self,
+        enabled: bool = True,
+        budget_bytes: int | None = None,
+        retained_levels: int = 1,
+        transfer_stats: TransferStats | None = None,
+    ):
+        if budget_bytes is not None and budget_bytes < 0:
+            raise ValueError(f"budget_bytes must be >= 0 or None, got {budget_bytes}")
+        if retained_levels < 1:
+            raise ValueError(f"retained_levels must be >= 1, got {retained_levels}")
         self.enabled = enabled
+        self.budget_bytes = budget_bytes
+        self.retained_levels = retained_levels
+        self.transfer_stats = transfer_stats if transfer_stats is not None else TransferStats()
         self.stats = HistCacheStats()
-        self._prev: Array | None = None
+        self._device: dict[tuple, Array] = {}
+        self._host: dict[tuple, np.ndarray] = {}
+        self._nbytes: dict[tuple, int] = {}
+        self._kind: dict[tuple, str] = {}  # "level" | "node" | "ancestor"
+        self._priority: dict[tuple, float] = {}  # lower = colder = spills first
+        self._stamp: dict[tuple, int] = {}  # insertion order tiebreak
+        self._clock = 0
+        self._dev_bytes = 0
         self._build_left: Array | None = None
-        self._node_hist: dict[int, Array] = {}  # heap node id -> (m, n_bins, 2)
         self._node_build_left: Array | None = None
 
+    # ------------------------------------------------------------- tier plumbing
     def reset(self) -> None:
-        self._prev = None
+        self._device.clear()
+        self._host.clear()
+        self._nbytes.clear()
+        self._kind.clear()
+        self._priority.clear()
+        self._stamp.clear()
+        self._dev_bytes = 0
         self._build_left = None
-        self._node_hist.clear()
         self._node_build_left = None
 
+    @property
+    def device_bytes(self) -> int:
+        """Bytes currently held in the device tier."""
+        return self._dev_bytes
+
+    def tier_of(self, key: tuple) -> str | None:
+        """"device" | "host" | None — where one entry currently lives."""
+        if key in self._device:
+            return "device"
+        if key in self._host:
+            return "host"
+        return None
+
+    def _put(self, key: tuple, hist: Array, kind: str, priority: float) -> None:
+        self._drop(key)
+        self._device[key] = hist
+        self._nbytes[key] = int(hist.nbytes)
+        self._kind[key] = kind
+        self._priority[key] = priority
+        self._stamp[key] = self._clock
+        self._clock += 1
+        self._dev_bytes += self._nbytes[key]
+
+    def _drop(self, key: tuple) -> None:
+        if key in self._device:
+            self._dev_bytes -= self._nbytes[key]
+            del self._device[key]
+        self._host.pop(key, None)
+        self._nbytes.pop(key, None)
+        self._kind.pop(key, None)
+        self._priority.pop(key, None)
+        self._stamp.pop(key, None)
+
+    def _spill(self, key: tuple) -> None:
+        """Device -> host: evict one cold histogram into a host buffer."""
+        arr = self._device.pop(key)
+        host = np.asarray(jax.device_get(arr))
+        self._host[key] = host
+        self._dev_bytes -= self._nbytes[key]
+        ts = self.transfer_stats
+        ts.hist_spills += 1
+        ts.hist_spill_bytes += host.nbytes
+        ts.device_to_host_bytes += host.nbytes
+
+    def _fetch(self, key: tuple) -> Array:
+        """Host -> device: stage a spilled histogram back through the same
+        `PageStream` engine the ELLPACK pages ride (no hand-rolled copy
+        loop). The stream's time ledger is private — a single synchronous
+        histogram put has nothing to overlap, and booking its wall==stage
+        seconds into the page pipeline's shared ledger would dilute
+        ``overlap_ratio`` — while the byte counters land in the shared
+        `TransferStats` next to the page traffic."""
+        from repro.pipeline.stream import PageStream
+
+        host = self._host.pop(key)
+        stream = PageStream(
+            lambda _i: host, [0], threaded=False,
+            cache_tag="hist", stats=TransferStats(),
+        )
+        (page,) = list(stream)
+        self._device[key] = page.device
+        self._dev_bytes += self._nbytes[key]
+        ts = self.transfer_stats
+        ts.hist_fetches += 1
+        ts.hist_fetch_bytes += host.nbytes
+        ts.host_to_device_bytes += host.nbytes
+        return page.device
+
+    def _coldest(self, keys: list[tuple]) -> tuple:
+        return min(keys, key=lambda k: (self._priority[k], self._stamp[k]))
+
+    def _enforce_budget(self) -> None:
+        if self.budget_bytes is None:
+            return
+        while self._dev_bytes > self.budget_bytes:
+            # spill the coldest live entry: shallowest level first (depthwise
+            # "level order"), lowest frontier gain first (lossguide "LRU by
+            # gain"); insertion order breaks exact ties
+            spillable = [
+                k for k in self._device if self._kind[k] != "ancestor"
+            ]
+            if spillable:
+                self._spill(self._coldest(spillable))
+                continue
+            # retired node ancestors last: they feed chain derivation while
+            # they live, and are re-derivable, so drop rather than spill (a
+            # host-tier ancestor saves no transfer)
+            ancestors = list(self._device)
+            if not ancestors:
+                return
+            self._drop(self._coldest(ancestors))
+
+    # ------------------------------------------------------- depthwise (levels)
     def plan(self, count: int, level_counts: Array | None) -> LevelPlan:
+        depth = count.bit_length() - 1  # count == 2**depth in the heap layout
+        parent_key = ("L", depth - 1)
         subtract = (
             self.enabled
             and count > 1
-            and self._prev is not None
             and level_counts is not None
+            and self.tier_of(parent_key) is not None
         )
         if not subtract:
             self._build_left = None
-            return LevelPlan(node_map=None, n_build=count, count=count)
+            return LevelPlan(node_map=None, n_build=count, count=count, source="build")
+        if parent_key in self._device:
+            source = "device"
+        else:
+            # resolution step: stage the spilled parent level back now, so the
+            # fetch overlaps the histogram pass that runs before expand()
+            self._fetch(parent_key)
+            source = "fetched"
         node_map, build_left = plan_level(count, level_counts)
         self._build_left = build_left
         self.stats.levels += 1
@@ -205,45 +406,102 @@ class HistogramCache:
         # tracers would leak out of a jitted caller's trace; drop stats there
         if not isinstance(built, jax.core.Tracer):
             self.stats._add_rows(built, total)
-        return LevelPlan(node_map=node_map, n_build=count // 2, count=count)
+        return LevelPlan(node_map=node_map, n_build=count // 2, count=count, source=source)
 
     def expand(self, plan: LevelPlan, built: Array) -> Array:
         """Compact build histogram -> full (count, m, n_bins, 2) level
-        histogram; caches the result as the next level's parent."""
+        histogram; stores the result as the next level's parent (within the
+        budget — overflow spills to the host tier)."""
+        depth = plan.count.bit_length() - 1
         if plan.node_map is None:
             full = built
         else:
-            full = expand_level(self._prev, built, self._build_left)
+            full = expand_level(self._device[("L", depth - 1)], built, self._build_left)
         if self.enabled:
-            self._prev = full
+            self._put(("L", depth), full, kind="level", priority=float(depth))
+            # depthwise retains exactly one level: the fresh one is the next
+            # plan's parent and nothing ever reads older levels (there is no
+            # whole-level derivation chain), so they are dropped free —
+            # `retained_levels` is the *per-node* ancestor-chain knob
+            for key in [k for k in self._nbytes if k[0] == "L" and k[1] < depth]:
+                self._drop(key)
+            self._enforce_budget()
         return full
 
-    # ------------------------------------------- per-node (best-first) API
+    # ------------------------------------------------- per-node (best-first) API
     def put_node(self, node: int, hist: Array) -> None:
         """Retain one frontier node's (m, n_bins, 2) histogram."""
         if self.enabled:
-            self._node_hist[node] = hist
+            self._put(("N", node), hist, kind="node", priority=_HOT)
+            self._enforce_budget()
+
+    def note_gain(self, node: int, gain: float) -> None:
+        """Record a frontier node's split gain: the spill order. Low-gain
+        leaves are popped last (or never), so they go cold first."""
+        key = ("N", node)
+        if key in self._priority:
+            self._priority[key] = float(gain)
 
     def discard_node(self, node: int) -> None:
         """Drop a node that left the frontier (became a permanent leaf)."""
-        self._node_hist.pop(node, None)
+        self._drop(("N", node))
+
+    def _derive_from_chain(self, node: int) -> Array | None:
+        """Multi-level subtraction: hist(node) from the nearest retired
+        ancestor minus the device-resident siblings along the path (at most
+        ``retained_levels - 1`` generations up). None if the chain breaks."""
+        if self.retained_levels < 2:
+            return None
+        sibs: list[Array] = []
+        cur = node
+        for _ in range(self.retained_levels - 1):
+            if cur == 0:
+                return None
+            parent = (cur - 1) // 2
+            sibling = cur + 1 if cur % 2 == 1 else cur - 1
+            sib_hist = self._device.get(("N", sibling))
+            if sib_hist is None:
+                return None
+            sibs.append(sib_hist)
+            anc = self._device.get(("N", parent))
+            if anc is not None:
+                for s in sibs:
+                    anc = anc - s
+                return anc
+            cur = parent
+        return None
 
     def plan_node(self, parent: int, child_counts: Array | None) -> LevelPlan:
         """Build/derive plan for the popped ``parent``'s 2-node child window.
 
-        With subtraction on and the parent histogram cached, only the smaller
-        child (exact row counts from the per-node repartition; ties build
-        left, matching `plan_level`) occupies the single kernel slot and the
-        sibling is derived in `expand_node`. Otherwise both children build.
+        Resolution order for the parent histogram: device tier (classic
+        subtraction) -> ancestor-chain derivation (``retained_levels >= 2``,
+        no transfer) -> host-tier fetch (bit-exact, staged back through
+        `PageStream`) -> full rebuild from rows. With a resolved parent, only
+        the smaller child (exact row counts from the per-node repartition;
+        ties build left, matching `plan_level`) occupies the single kernel
+        slot and the sibling is derived in `expand_node`.
         """
-        subtract = (
-            self.enabled
-            and parent in self._node_hist
-            and child_counts is not None
-        )
-        if not subtract:
+        key = ("N", parent)
+        if not (self.enabled and child_counts is not None):
             self._node_build_left = None
-            return LevelPlan(node_map=None, n_build=2, count=2)
+            return LevelPlan(node_map=None, n_build=2, count=2, source="build")
+        if key in self._device:
+            source = "device"
+        else:
+            chain = self._derive_from_chain(parent)
+            if chain is not None:
+                prio = self._priority.get(key, _HOT)
+                self._put(key, chain, kind="node", priority=prio)
+                self.stats.chain_derived_nodes += 1
+                source = "derived"
+            elif key in self._host:
+                self._fetch(key)
+                source = "fetched"
+            else:
+                self._node_build_left = None
+                self.stats.rebuilt_nodes += 1
+                return LevelPlan(node_map=None, n_build=2, count=2, source="build")
         node_map, build_left = plan_level(2, child_counts)
         self._node_build_left = build_left
         self.stats.levels += 1
@@ -253,19 +511,44 @@ class HistogramCache:
         total = child_counts[0] + child_counts[1]
         if not isinstance(built, jax.core.Tracer):
             self.stats._add_rows(built, total)
-        return LevelPlan(node_map=node_map, n_build=1, count=2)
+        return LevelPlan(node_map=node_map, n_build=1, count=2, source=source)
 
     def expand_node(self, parent: int, plan: LevelPlan, built: Array) -> Array:
-        """Compact build -> full (2, m, n_bins, 2) child histograms; caches
-        both children as frontier nodes and evicts the parent."""
+        """Compact build -> full (2, m, n_bins, 2) child histograms; stores
+        both children as frontier nodes and retires (``retained_levels >= 2``)
+        or evicts the parent."""
+        key = ("N", parent)
         if plan.node_map is None:
             full = built
         else:
-            full = expand_level(
-                self._node_hist[parent][None], built, self._node_build_left
-            )
+            full = expand_level(self._device[key][None], built, self._node_build_left)
         if self.enabled:
-            self._node_hist[2 * parent + 1] = full[0]
-            self._node_hist[2 * parent + 2] = full[1]
-            self.discard_node(parent)
+            self._put(("N", 2 * parent + 1), full[0], kind="node", priority=_HOT)
+            self._put(("N", 2 * parent + 2), full[1], kind="node", priority=_HOT)
+            if self.retained_levels > 1 and key in self._device:
+                # retire the parent: its depth orders ancestor drops, and the
+                # chain for its descendants may reach it without a transfer
+                self._kind[key] = "ancestor"
+                self._priority[key] = float((parent + 1).bit_length() - 1)
+                self._host.pop(key, None)
+                # prune path ancestors the bounded chain can no longer reach
+                cur, steps = parent, 0
+                while cur > 0:
+                    cur = (cur - 1) // 2
+                    steps += 1
+                    akey = ("N", cur)
+                    if steps >= self.retained_levels - 1 and self._kind.get(akey) == "ancestor":
+                        self._drop(akey)
+            else:
+                self._drop(key)
+            self._enforce_budget()
         return full
+
+
+class HistogramCache(HistogramStore):
+    """Backward-compatible alias: the unlimited-budget single-tier store.
+
+    ``HistogramCache(enabled=...)`` behaves bit-for-bit like the pre-tiered
+    subtraction cache (nothing spills, no ancestor chains); the tiered knobs
+    are still accepted for callers migrating to `HistogramStore`.
+    """

@@ -9,6 +9,14 @@ working set, validated against the byte counters of the implementation
   out-of-core   double-buffered page + per-row training state + histograms
   ooc+sampling  double-buffered page + compacted (f·n)-row ELLPACK
                 + per-row state for sampled rows only + histograms
+
+The histogram term is depth-honest: the paper's fixed ``2^(d-1)`` snapshot
+ignores both the compact build half that coexists during sibling expansion
+and the ancestor levels the subtraction cache retains — exactly the bytes
+that OOM deep trees. `histogram_bytes(depth, retained_levels)` models the
+peak working set of `core.histcache.HistogramStore`, and ``hist_budget_bytes``
+caps the *retained* (spillable) share at the store's device budget, so
+`ExecutionPolicy` decisions stay honest when spilling is enabled.
 """
 from __future__ import annotations
 
@@ -26,11 +34,61 @@ class DeviceMemoryModel:
     page_bytes: int = 32 * 1024 * 1024
     # per-row device state: gradient pair (8) + position (4) + cached pred (4)
     row_state_bytes: int = 16
+    # HistogramStore ancestor-chain depth (K >= 1; shapes lossguide demand —
+    # depthwise always retains exactly the parent level)
+    hist_retained_levels: int = 1
+    # device budget of the HistogramStore; None = everything stays device-
+    # resident, otherwise retained histograms past the budget spill to host
+    hist_budget_bytes: int | None = None
+    # lossguide leaf budget; 0 = depthwise (whole-level histograms)
+    max_leaves: int = 0
+
+    @property
+    def hist_node_bytes(self) -> int:
+        """One node histogram: m x n_bins x (g, h) f32."""
+        return self.num_features * self.max_bin * 2 * 4
+
+    def histogram_bytes(self, depth: int | None = None, retained_levels: int | None = None) -> int:
+        """Peak device bytes of per-node histograms while building level
+        ``depth`` (default: the deepest level) with ``retained_levels``
+        retained ancestor levels.
+
+        Depthwise (``retained_levels >= 1``): the peak sits inside
+        `expand_level`, where the retained parent level, the compact build
+        half, and the full level being assembled coexist —
+        ``2^(d-1) + 2^(d-1) + 2^d = 2^(d+1)`` node histograms; the store
+        drops older levels outright (no whole-level derivation chain reads
+        them), so K beyond 1 adds nothing here. ``retained_levels=0`` models
+        the subtraction-free full build (just the level). Lossguide
+        (``max_leaves > 0``): a 4-node working window (parent + built slot +
+        the 2 expanded children) plus the spillable frontier cache of up to
+        ``max_leaves`` histograms and K-1 retired ancestors.
+        """
+        d = (self.max_depth - 1) if depth is None else depth
+        k = self.hist_retained_levels if retained_levels is None else retained_levels
+        if self.max_leaves:
+            working = 4
+            retained = (min(self.max_leaves, 2 ** max(d, 0)) + max(k - 1, 0)) if k else 0
+        elif d == 0 or k < 1:
+            working, retained = 2**d, 0
+        else:
+            working = 2**d + 2 ** (d - 1)
+            retained = 2 ** (d - 1)
+        return (working + retained) * self.hist_node_bytes
 
     @property
     def hist_bytes(self) -> int:
-        # deepest level histogram: 2^(max_depth-1) nodes x m x bins x (g,h) f32
-        return (2 ** (self.max_depth - 1)) * self.num_features * self.max_bin * 2 * 4
+        """Device share of the histogram working set after the store budget.
+
+        Only lossguide's frontier cache is cappable: the depthwise parent
+        level is device-resident through plan/build/expand even when the
+        budget spills it between passes, so the depthwise peak is
+        budget-invariant."""
+        demand = self.histogram_bytes()
+        if self.hist_budget_bytes is None or not self.max_leaves:
+            return demand
+        working = self.histogram_bytes(retained_levels=0)
+        return working + min(demand - working, self.hist_budget_bytes)
 
     @property
     def fixed_bytes(self) -> int:

@@ -101,9 +101,11 @@ def build_tree_paged(
     Per-node page skipping (``page_skipping``, lossguide only): before a
     popped node's histogram pass, pages none of whose rows sit inside the
     node's 2-child window are dropped from the pass entirely — no disk fetch,
-    no host->device staging — and counted in ``stats.pages_skipped``. Needs a
-    ``make_stream`` accepting ``indices=``; zero-arg closures always stream
-    every page.
+    no host->device staging — and counted in ``stats.pages_skipped``. The
+    repartition pass skips the same set: only the popped node's rows move, so
+    pages whose rows all sit at leaves are proven immutable and never
+    streamed. Needs a ``make_stream`` accepting ``indices=``; zero-arg
+    closures always stream every page.
     """
     g_j, h_j = jnp.asarray(g), jnp.asarray(h)
     positions: dict[int, Array] = {
@@ -113,17 +115,9 @@ def build_tree_paged(
         page_skipping and tp.grow_policy == "lossguide" and _accepts_indices(make_stream)
     )
 
-    def start_stream(offset: int, window: int):
-        """One stream pass, restricted to pages with rows in the node window
-        when the caller supports subset passes (lossguide per-node passes)."""
-        if not skip_enabled or offset == 0:
-            return make_stream()
-        active = [
-            i
-            for i, (_, nr) in enumerate(page_extents)
-            if nr
-            and bool(jnp.any((positions[i] >= offset) & (positions[i] < offset + window)))
-        ]
+    def subset_stream(active: list[int]):
+        """Start a pass over ``active`` pages only, counting the skips; falls
+        back to a full pass when nothing (or everything) is skippable."""
         if not active or len(active) == len(page_extents):
             return make_stream()
         stream = make_stream(indices=active)
@@ -131,6 +125,29 @@ def build_tree_paged(
         if stats is not None:
             stats.pages_skipped += len(page_extents) - len(active)
         return stream
+
+    # the repartition pass's skip set, stashed for the histogram pass that
+    # follows it in the same pop — the two sets are provably identical (only
+    # the popped node's rows move, into the window the hist pass scans), so
+    # the per-page device predicates run once per pop, not twice
+    active_box: list[list[int] | None] = [None]
+
+    def start_stream(offset: int, window: int):
+        """One histogram pass, restricted to pages with rows in the node
+        window when the caller supports subset passes (lossguide per-node
+        passes)."""
+        if not skip_enabled or offset == 0:
+            return make_stream()
+        active = active_box[0]
+        active_box[0] = None
+        if active is None:  # no repartition stashed a set (defensive)
+            active = [
+                i
+                for i, (_, nr) in enumerate(page_extents)
+                if nr
+                and bool(jnp.any((positions[i] >= offset) & (positions[i] < offset + window)))
+            ]
+        return subset_stream(active)
 
     def hist_fn(offset: int, count: int, plan: LevelPlan) -> Array:
         # one double-buffered pass per level; page k+1 stages while page k's
@@ -142,7 +159,23 @@ def build_tree_paged(
 
     def partition_fn(feature, split_bin, default_left, is_leaf, count_level):
         counts = None
-        for sp in make_stream():
+        if skip_enabled:
+            # per-node repartition only moves the popped node's rows — after
+            # the split write it is the single non-leaf holding rows, so a
+            # page whose rows all sit at leaves cannot change and is skipped.
+            # This is exactly the histogram pass's skip set: the rows that
+            # moved (into the 2-child window the next hist pass scans) came
+            # from these same pages — stash it so the hist pass reuses it.
+            active = [
+                i
+                for i, (_, nr) in enumerate(page_extents)
+                if nr and bool(jnp.any(~is_leaf[positions[i]]))
+            ]
+            active_box[0] = active
+            stream = subset_stream(active)
+        else:
+            stream = make_stream()
+        for sp in stream:
             positions[sp.index] = ops.partition_rows(
                 sp.device, positions[sp.index], feature, split_bin,
                 default_left, is_leaf, impl=impl,

@@ -18,9 +18,14 @@ the booster's `SamplingConfig` requests sampling promotes to the Alg. 7 fast
 path, mirroring how the external trainer always behaved.
 
 The policy also carries the execution knobs of the streaming engine (prefetch
-and staging depths, device-page cache size, per-node page skipping) and the
-checkpoint cadence — everything about *how* training executes that is not a
-model hyperparameter (`BoosterParams`) or a data property (`DMatrix`).
+and staging depths, device-page cache size, per-node page skipping), the
+tiered histogram store (``hist_budget_bytes`` / ``hist_retained_levels`` —
+see `core.histcache.HistogramStore`), and the checkpoint cadence — everything
+about *how* training executes that is not a model hyperparameter
+(`BoosterParams`) or a data property (`DMatrix`). The byte model folds the
+histogram knobs in, so ``mode="auto"`` stays honest for deep trees: retained
+levels raise the device demand, a histogram budget caps it (spilling the
+rest to host).
 """
 from __future__ import annotations
 
@@ -66,6 +71,16 @@ class ExecutionPolicy:
     # candidate sampling fractions for auto-selected sampling, tried largest
     # first (the paper sweeps f in {0.5, 0.3, 0.1})
     sampling_fractions: tuple[float, ...] = (0.5, 0.3, 0.1)
+    # device budget of the tiered HistogramStore: None keeps every retained
+    # histogram device-resident; a byte cap spills cold levels / frontier
+    # nodes to host buffers, staged back through PageStream on demand
+    # (0 = everything spills). Threaded into the store by GradientBooster and
+    # into the byte model here.
+    hist_budget_bytes: int | None = None
+    # lossguide ancestor-chain depth (K >= 1): up to K-1 retired ancestors
+    # per path stay device-resident for transfer-free multi-level derivation.
+    # Depthwise always retains exactly the parent level.
+    hist_retained_levels: int = 1
     # streaming-engine knobs (see repro.pipeline.PageStream)
     prefetch_depth: int = 2
     staging_depth: int = 2
@@ -88,6 +103,10 @@ class ExecutionPolicy:
             not (0.0 < f <= 1.0) for f in self.sampling_fractions
         ):
             raise ValueError("sampling_fractions must be fractions in (0, 1]")
+        if self.hist_budget_bytes is not None and self.hist_budget_bytes < 0:
+            raise ValueError("hist_budget_bytes must be >= 0 or None")
+        if self.hist_retained_levels < 1:
+            raise ValueError("hist_retained_levels must be >= 1")
 
     # ------------------------------------------------------------- byte model
     def memory_model(self, dm, params) -> DeviceMemoryModel:
@@ -95,11 +114,19 @@ class ExecutionPolicy:
         kw = {}
         if self.memory_budget_bytes is not None:
             kw["hbm_bytes"] = self.memory_budget_bytes
+        max_leaves = (
+            params.max_leaves
+            if getattr(params, "grow_policy", "depthwise") == "lossguide"
+            else 0
+        )
         return DeviceMemoryModel(
             num_features=dm.num_features,
             max_bin=max(dm.n_bins, 1),
             max_depth=params.max_depth,
             page_bytes=dm.page_bytes,
+            hist_retained_levels=self.hist_retained_levels,
+            hist_budget_bytes=self.hist_budget_bytes,
+            max_leaves=max_leaves,
             **kw,
         )
 
@@ -128,7 +155,29 @@ class ExecutionPolicy:
                 f = min(self.sampling_fractions)
             return ExecutionDecision("sampled", f, model, "forced sampled")
 
-        # mode == "auto": the decision procedure proper
+        # mode == "auto": the decision procedure proper.
+        # Resolve-time validation first: the fixed working set — dominated by
+        # the histogram demand of max_depth/max_leaves — must fit the budget
+        # in *some* mode before any row is staged. Forced modes skip this
+        # (their documented contract is "skip the procedure").
+        if model.fixed_bytes > model.hbm_bytes:
+            leaves = f"/max_leaves={model.max_leaves}" if model.max_leaves else ""
+            remedy = (
+                "Set ExecutionPolicy(hist_budget_bytes=...) to spill retained "
+                "histograms to host"
+                if model.max_leaves
+                else "Use grow_policy='lossguide' with max_leaves (plus "
+                "ExecutionPolicy(hist_budget_bytes=...)) to bound and spill "
+                "the histogram working set"
+            )
+            raise ValueError(
+                f"memory budget {model.hbm_bytes} bytes does not fit the fixed "
+                f"device working set ({model.fixed_bytes} bytes): histograms "
+                f"alone need {model.hist_bytes} bytes at "
+                f"max_depth={model.max_depth}{leaves} with "
+                f"{model.hist_retained_levels} retained level(s). "
+                f"{remedy}, or lower max_depth/max_bin"
+            )
         n = dm.n_rows
         in_core_bytes = (
             model.fixed_bytes
@@ -140,17 +189,33 @@ class ExecutionPolicy:
                 "in_core", None, model,
                 f"fits in core ({in_core_bytes} <= {model.hbm_bytes} bytes)",
             )
+        # does the histogram working set tip the in-core decision? (deep trees:
+        # the matrix alone would fit, the retained histograms do not)
+        hist_tip = ""
+        if in_core_bytes - model.hist_bytes <= model.hbm_bytes:
+            hint = (
+                "hist_budget_bytes can spill it"
+                if model.max_leaves
+                else "lossguide growth (max_leaves) with hist_budget_bytes "
+                "can shrink it"
+            )
+            hist_tip = (
+                f"; histogram working set {model.hist_bytes} bytes "
+                f"(max_depth={model.max_depth}, {model.hist_retained_levels} "
+                f"retained level(s)) tips in-core over budget — {hint}"
+            )
         if n <= model.max_rows_out_of_core():
             if requested:
                 return ExecutionDecision(
                     "sampled", f_req, model,
                     f"exceeds in-core budget ({n} > {model.max_rows_in_core()} "
-                    "rows) and sampling configured -> Alg. 7",
+                    f"rows) and sampling configured -> Alg. 7{hist_tip}",
                 )
             return ExecutionDecision(
                 "out_of_core", None, model,
                 f"exceeds in-core budget ({n} > {model.max_rows_in_core()} rows), "
-                f"streaming state fits ({n} <= {model.max_rows_out_of_core()})",
+                f"streaming state fits ({n} <= {model.max_rows_out_of_core()})"
+                f"{hist_tip}",
             )
         # even streaming per-row state busts the budget: sampling shrinks it
         if requested and n <= model.max_rows_sampled(f_req):

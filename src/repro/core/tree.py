@@ -21,10 +21,15 @@ expands it via per-node 2-wide `LevelPlan`s, and repartitions only that
 node's rows. Select with ``TreeParams(grow_policy="lossguide",
 max_leaves=...)``; every builder dispatches through `tree_growth_driver`.
 
-A `HistogramCache` sits between the driver and the callbacks: per level (or
+A `HistogramStore` sits between the driver and the callbacks: per level (or
 per popped node) it plans which nodes must actually be built (the smaller
 child of each split pair) and derives every sibling by subtraction from the
-cached parent — see `core/histcache.py`. Disable per tree with
+retained parent — see `core/histcache.py`. Each plan runs an explicit
+fetch/derive/rebuild resolution step (recorded on ``LevelPlan.source``): the
+parent histogram is used where it sits on device, staged back from the host
+tier when the store's byte budget spilled it, reconstructed from a retained
+ancestor chain (multi-level subtraction), or — when nothing resolves — the
+window is rebuilt from rows. Disable per tree with
 ``TreeParams(hist_subtraction=False)`` to force the full build.
 
 Rows carry a global node-id position; once their node becomes a leaf the
@@ -136,7 +141,11 @@ class TreeBuildResult(NamedTuple):
 # `ops.build_histogram_paged`, which do the remap) so rows at derive-set nodes
 # contribute to no bin and only ``plan.n_build`` node histograms are
 # materialized. The driver reconstructs derive-set histograms by subtraction
-# from the cached parent level before split evaluation.
+# from the resolved parent before split evaluation; ``plan.source`` records
+# how the store resolved that parent (device / fetched from the host tier /
+# derived from an ancestor chain) — a "build" plan means nothing resolved and
+# the window is rebuilt from rows. HistFn implementations never see the
+# tiers: the resolution is entirely the store's concern.
 HistFn = Callable[[int, int, LevelPlan], Array]
 
 # PartitionFn(feature, split_bin, default_left, is_leaf, count_level)
@@ -356,6 +365,8 @@ def grow_tree_lossguide_generic(
                     float(lg[j]), float(lh[j]), float(rg[j]), float(rh[j]),
                 )
                 heapq.heappush(frontier, (-float(gain[j]), node, cand))
+                # the store spills coldest-first: frontier gain is the heat
+                cache.note_gain(node, float(gain[j]))
             else:
                 cache.discard_node(node)  # permanent leaf
 

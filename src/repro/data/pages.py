@@ -48,6 +48,15 @@ class TransferStats:
     # pages never fetched/staged because a per-node lossguide pass proved no
     # row of theirs sits in the popped node's window (see build_tree_paged)
     pages_skipped: int = 0
+    # --- tiered histogram store ledger (filled by core.histcache.HistogramStore) ---
+    # cold node/level histograms evicted from the device budget land in host
+    # buffers (spill) and are staged back through PageStream when a plan
+    # needs them again (fetch); fetch bytes are *also* counted in
+    # host_to_device_bytes because the fetch goes through the same staging path
+    hist_spill_bytes: int = 0
+    hist_fetch_bytes: int = 0
+    hist_spills: int = 0
+    hist_fetches: int = 0
 
     @property
     def stream_serial_seconds(self) -> float:
@@ -78,6 +87,10 @@ class TransferStats:
         self.cache_hits = 0
         self.cache_hit_bytes = 0
         self.pages_skipped = 0
+        self.hist_spill_bytes = 0
+        self.hist_fetch_bytes = 0
+        self.hist_spills = 0
+        self.hist_fetches = 0
 
 
 GLOBAL_STATS = TransferStats()

@@ -53,7 +53,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.histcache import (
-    HistogramCache,
+    HistogramStore,
     expand_level,
     level_row_counts,
     plan_level,
@@ -87,6 +87,15 @@ class DistConfig:
     # TreeParams leaf budget when set
     grow_policy: str | None = None
     max_leaves: int | None = None
+    # tiered HistogramStore knobs for the host-driven builders (the paged
+    # depthwise build and the best-first frontier): a device byte budget
+    # spills cold post-psum histograms to host, K >= 2 retains ancestors for
+    # multi-level derivation. The store lives on the driving host and only
+    # ever sees psum'd histograms and psum'd row counts, so spill decisions
+    # are made once from state every shard shares — the psum payload is still
+    # only the built half of each level/window.
+    hist_budget_bytes: int | None = None
+    hist_retained_levels: int = 1
 
     @property
     def all_axes(self) -> tuple[str, ...]:
@@ -323,6 +332,7 @@ def _grow_tree_distributed_lossguide(
     cfg: DistConfig,
     cut_values=None,
     cut_ptrs=None,
+    transfer_stats=None,
 ) -> tuple[TreeArrays, Array]:
     """Best-first distributed build: host-driven frontier over shard_map'd
     per-pass kernels.
@@ -399,7 +409,12 @@ def _grow_tree_distributed_lossguide(
         )
         return counts if count_level is not None else None
 
-    cache = HistogramCache(enabled=cfg.hist_subtraction and tp.hist_subtraction)
+    cache = HistogramStore(
+        enabled=cfg.hist_subtraction and tp.hist_subtraction,
+        budget_bytes=cfg.hist_budget_bytes,
+        retained_levels=cfg.hist_retained_levels,
+        transfer_stats=transfer_stats,
+    )
     tree = grow_tree_lossguide_generic(
         hist_fn, partition_fn, jnp.sum(g_j), jnp.sum(h_j), n_bins, bin_valid,
         tp, cut_values, cut_ptrs, hist_cache=cache,
@@ -484,13 +499,21 @@ def grow_tree_distributed(
     cfg: DistConfig,
     cut_values=None,
     cut_ptrs=None,
+    transfer_stats=None,
 ):
-    """Build one tree with rows/features sharded over the mesh."""
+    """Build one tree with rows/features sharded over the mesh.
+
+    ``transfer_stats`` is the `TransferStats` sink for the host-driven
+    lossguide build's histogram spill/fetch traffic (see
+    ``DistConfig.hist_budget_bytes``); the in-SPMD depthwise build never
+    spills, so it ignores the sink.
+    """
     tp = cfg.resolve_tree_params(tp)
     check_feature_parallel_lossguide(tp, cfg)
     if tp.grow_policy == "lossguide":
         return _grow_tree_distributed_lossguide(
-            mesh, bins, g, h, n_bins, bin_valid, tp, cfg, cut_values, cut_ptrs
+            mesh, bins, g, h, n_bins, bin_valid, tp, cfg, cut_values, cut_ptrs,
+            transfer_stats=transfer_stats,
         )
     row_spec = P(cfg.data_axes, cfg.feature_axis)
     vec_spec = P(cfg.data_axes)
@@ -536,6 +559,7 @@ def grow_tree_distributed_paged(
     cut_values=None,
     cut_ptrs=None,
     page_skipping: bool = True,
+    transfer_stats=None,
 ) -> tuple[TreeArrays, Array]:
     """Out-of-core distributed build: one tree over pages that never all sit
     in device memory, rows of each staged page sharded over `cfg.data_axes`.
@@ -556,13 +580,21 @@ def grow_tree_distributed_paged(
     ``make_stream`` accepts an ``indices=`` kwarg (forward it to
     ``PageSet.stream`` / ``PageStream.from_host_pages``), pages with no row in
     the popped node's window are skipped outright (``page_skipping``; skips
-    land in ``TransferStats.pages_skipped``).
+    land in ``TransferStats.pages_skipped``). Pass the stream's
+    `TransferStats` as ``transfer_stats`` so the tiered store's histogram
+    spill/fetch traffic (``DistConfig.hist_budget_bytes``) lands in the same
+    ledger as the page traffic.
     """
     from repro.core.outofcore import build_tree_paged
 
     tp = cfg.resolve_tree_params(tp)
     check_feature_parallel_lossguide(tp, cfg)
-    cache = HistogramCache(enabled=cfg.hist_subtraction and tp.hist_subtraction)
+    cache = HistogramStore(
+        enabled=cfg.hist_subtraction and tp.hist_subtraction,
+        budget_bytes=cfg.hist_budget_bytes,
+        retained_levels=cfg.hist_retained_levels,
+        transfer_stats=transfer_stats,
+    )
     tree, positions = build_tree_paged(
         make_stream, list(page_extents), g, h, n_bins, bin_valid, tp,
         cut_values, cut_ptrs, impl=cfg.kernel_impl, hist_cache=cache,
@@ -629,8 +661,14 @@ def fit_sharded(
             f"feature_axis {cfg.feature_axis!r} ({mesh.shape[cfg.feature_axis]} shards)"
         )
 
+    from repro.data.pages import TransferStats
+
     booster = GradientBooster(params, policy=ExecutionPolicy(mode="in_core"))
     booster.cuts = dm.cuts
+    # one ledger for the whole sharded fit: the host-driven lossguide store's
+    # histogram spill/fetch traffic (DistConfig.hist_budget_bytes) is
+    # observable on the returned booster, like every other engine
+    booster.stats = TransferStats()
     n_bins = dm.n_bins
     bin_valid = bin_valid_from_cuts(dm.cuts, n_bins)
     bins = jax.device_put(
@@ -666,6 +704,7 @@ def fit_sharded(
         tree, positions = grow_tree_distributed(
             mesh, bins, g * scale, h * scale, n_bins, bin_valid,
             params.tree_params(), cfg, dm.cuts.values, dm.cuts.ptrs,
+            transfer_stats=booster.stats,
         )
         booster.trees.append(tree)
         margin = margin + params.learning_rate * tree.leaf_value[positions]

@@ -59,7 +59,10 @@ def test_auto_selects_in_core_with_room(iter_dm):
 def test_auto_selects_out_of_core_and_matches_forced(iter_dm):
     """Acceptance: auto picks out-of-core when the matrix busts the in-core
     budget, and the auto-selected forest equals the explicitly-forced one."""
-    policy = ExecutionPolicy(mode="auto", memory_budget_bytes=80_000)
+    # budget between the streaming floor (~97 KB: fixed working set incl. the
+    # depth-honest histogram term + 2 pages + per-row state) and the in-core
+    # threshold (~123 KB)
+    policy = ExecutionPolicy(mode="auto", memory_budget_bytes=110_000)
     b_auto = _booster(policy)
     b_auto.fit(iter_dm)
     assert b_auto.decision_.mode == "out_of_core", b_auto.decision_.reason
@@ -74,7 +77,9 @@ def test_auto_selects_out_of_core_and_matches_forced(iter_dm):
 
 
 def test_auto_selects_sampled_when_streaming_state_busts_budget(iter_dm):
-    policy = ExecutionPolicy(mode="auto", memory_budget_bytes=60_000)
+    # below the streaming floor (~97 KB) but with room for the f=0.1
+    # compacted page — only the smallest grid fraction fits
+    policy = ExecutionPolicy(mode="auto", memory_budget_bytes=90_000)
     b = _booster(policy)
     b.fit(iter_dm)
     d = b.decision_
