@@ -39,7 +39,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import kernel_bench, max_data_size, sampling_methods
-    from benchmarks import training_curves, training_time
+    from benchmarks import serving_latency, training_curves, training_time
 
     table = {
         "table1_max_data_size": max_data_size.main,
@@ -47,6 +47,7 @@ def main() -> None:
         "fig1_training_curves": training_curves.main,
         "sampling_methods": sampling_methods.main,
         "kernel_bench": kernel_bench.main,
+        "serving_latency": serving_latency.main,
     }
     only = set(args.only.split(",")) if args.only else None
 

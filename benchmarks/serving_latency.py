@@ -1,0 +1,147 @@
+"""Serving-tier benchmarks: fused-forest throughput, batcher latency, paging.
+
+The headline scale-free signal is ``serve_throughput_ratio`` — the fused
+whole-forest kernel's row throughput over the per-tree Python-dispatch loop on
+the same batch. One launch vs T launches is the whole point of `PackedForest`,
+so the ratio is machine-independent enough to gate (nightly floor 2x); the
+wall-time rows are printed for trajectory but not gated.
+
+Remaining rows: `BatchServer` request-latency quantiles / occupancy / rows/s
+under synthetic single-row traffic, and the two out-of-core serving paths
+(row pages streamed through PageStream; tree-chunked paged forest).
+
+Uses a fabricated random forest (valid complete-layout trees) rather than a
+trained one — prediction cost depends only on forest shape, and fabrication
+keeps the bench fast and its size freely scalable.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import MAX_BIN, csv_row, save_result
+from repro.serve import BatchServer, ServeStats
+from repro.serve.engine import predict_margin_dmatrix
+from repro.serve.forest import PackedForest
+
+
+def _bench(fn, iters=10) -> float:
+    """us per call: min over ``iters`` blocked calls after a warmup."""
+    jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def random_forest(
+    n_trees: int, max_depth: int, m: int, max_bin: int, seed: int = 0
+) -> PackedForest:
+    """A valid complete-layout forest with random splits/leaves (no training)."""
+    rng = np.random.default_rng(seed)
+    n_total = 2 ** (max_depth + 1) - 1
+    n_last = 2**max_depth
+    is_leaf = rng.random((n_trees, n_total)) < 0.15  # some early leaves
+    is_leaf[:, n_last - 1 :] = True  # the last level is all leaves
+    return PackedForest(
+        feature=jnp.asarray(rng.integers(0, m, (n_trees, n_total)).astype(np.int32)),
+        split_bin=jnp.asarray(
+            rng.integers(0, max_bin, (n_trees, n_total)).astype(np.int32)
+        ),
+        split_value=jnp.zeros((n_trees, n_total), jnp.float32),
+        default_left=jnp.asarray(rng.random((n_trees, n_total)) < 0.5),
+        is_leaf=jnp.asarray(is_leaf),
+        leaf_value=jnp.asarray(
+            (0.1 * rng.normal(size=(n_trees, n_total))).astype(np.float32)
+        ),
+        max_depth=max_depth,
+        learning_rate=0.3,
+        base_margin=0.5,
+    )
+
+
+def main(quick: bool = False) -> list[str]:
+    rng = np.random.default_rng(3)
+    R, T, depth, m = (2048, 64, 6, 28) if quick else (8192, 256, 6, 28)
+    forest = random_forest(T, depth, m, MAX_BIN)
+    bins_np = rng.integers(0, MAX_BIN, (R, m)).astype(np.int32)
+    bins = jnp.asarray(bins_np)
+
+    # --- fused whole-forest launch vs the per-tree Python-dispatch loop
+    us_loop = _bench(lambda: forest.predict_margin_per_tree(bins), iters=3)
+    us_fused = _bench(lambda: forest.predict_margin_bins(bins))
+    loop_rows_s = R / (us_loop / 1e6)
+    fused_rows_s = R / (us_fused / 1e6)
+    ratio = us_loop / us_fused
+
+    # --- request micro-batching: single-row traffic, padded fixed-shape launches
+    n_req = 512 if quick else 2048
+    max_batch = 128
+    predict_fn = lambda rows: forest.predict_margin_bins(  # noqa: E731
+        jnp.asarray(rows.astype(np.int32))
+    )
+    predict_fn(bins_np[:max_batch].astype(np.float32))  # warm the jit cache
+    stats = ServeStats()
+    with BatchServer(
+        predict_fn, max_batch=max_batch, max_delay_ms=2.0, stats=stats
+    ) as srv:
+        futures = [srv.submit(bins_np[i % R].astype(np.float32)) for i in range(n_req)]
+        for f in futures:
+            f.result(timeout=120.0)
+
+    # --- out-of-core serving: stream row pages / page the forest in tree-chunks
+    from repro.data.dmatrix import ArrayDMatrix
+
+    X = rng.normal(size=(R, m)).astype(np.float32)
+    dm = ArrayDMatrix(X, max_bin=MAX_BIN, page_bytes=16 * 1024)
+    dbins = jnp.asarray(dm.single_page_bins().astype(np.int32))
+    n_pages = len(dm.page_set().row_offsets)
+    us_stream = _bench(lambda: predict_margin_dmatrix(forest, dm), iters=3)
+    chunk = max(T // 8, 1)
+    us_chunked = _bench(
+        lambda: predict_margin_dmatrix(forest, dm, trees_per_chunk=chunk), iters=3
+    )
+    # keep the bench honest: all three paths must agree exactly
+    in_core = np.asarray(forest.predict_margin_bins(dbins))
+    assert np.array_equal(predict_margin_dmatrix(forest, dm), in_core)
+    assert np.array_equal(
+        predict_margin_dmatrix(forest, dm, trees_per_chunk=chunk), in_core
+    )
+
+    save_result("serving_latency", {
+        "n_rows": R, "n_trees": T, "max_depth": depth, "num_features": m,
+        "per_tree_us": us_loop, "fused_us": us_fused,
+        "per_tree_rows_per_s": loop_rows_s, "fused_rows_per_s": fused_rows_s,
+        "throughput_ratio": round(ratio, 3),
+        "batcher": {
+            "requests": stats.requests, "batches": stats.batches,
+            "max_batch": max_batch, "p50_ms": stats.p50_ms, "p99_ms": stats.p99_ms,
+            "occupancy": stats.occupancy, "rows_per_s": stats.rows_per_s,
+        },
+        "stream_us": us_stream, "stream_pages": n_pages,
+        "paged_forest_us": us_chunked, "trees_per_chunk": chunk,
+    })
+    return [
+        csv_row("serve_per_tree_python", us_loop,
+                f"rows_per_s={loop_rows_s:.0f} trees={T}"),
+        csv_row("serve_fused_forest", us_fused,
+                f"rows_per_s={fused_rows_s:.0f} trees={T}"),
+        csv_row("serve_throughput_ratio", 0.0,
+                f"ratio={ratio:.2f}x fused_vs_per_tree"),
+        csv_row("serve_batcher", stats.p50_ms * 1e3,
+                f"p50_ms={stats.p50_ms:.2f} p99_ms={stats.p99_ms:.2f} "
+                f"occupancy={stats.occupancy:.2f} rows_per_s={stats.rows_per_s:.0f}"),
+        csv_row("serve_stream_paged", us_stream,
+                f"rows_per_s={R / (us_stream / 1e6):.0f} pages={n_pages}"),
+        csv_row("serve_paged_forest", us_chunked,
+                f"rows_per_s={R / (us_chunked / 1e6):.0f} trees_per_chunk={chunk}"),
+    ]
+
+
+if __name__ == "__main__":
+    print("\n".join(main(quick=True)))

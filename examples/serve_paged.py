@@ -1,83 +1,109 @@
-"""Paged-KV serving demo (the paper's page idea applied to decode memory).
+"""Out-of-core forest serving demo (the paper's paging idea at predict time).
 
-Prefills a batch of prompts into a PAGED KV cache, then decodes greedily,
-comparing against the contiguous-cache path (identical logits). Finally
-demonstrates out-of-core serving: the KV page pool is offloaded to host RAM
-and streamed back through `repro.pipeline.PageStream` — the same
-double-buffered engine the out-of-core trainer uses — before decoding
-continues bit-identically.
+Trains a booster from a batch iterator whose ELLPACK pages spill to disk
+(`IterDMatrix(cache_dir=...)`), reopens the page cache as a `PagedDMatrix`,
+and serves predictions three ways that must agree bit-for-bit:
 
-    PYTHONPATH=src python examples/serve_paged.py
+  1. the fused whole-forest kernel vs the per-tree reference loop,
+  2. `predict(PagedDMatrix)` streaming row pages through PageStream
+     vs the in-core fused launch,
+  3. a paged forest (tree-chunks streamed through the same engine,
+     margins chained chunk-to-chunk) vs the resident forest.
+
+Then a `BatchServer` coalesces single-row requests into padded batches and
+prints its `ServeStats` ledger (latency quantiles, occupancy, rows/s).
+
+    PYTHONPATH=src python examples/serve_paged.py [--quick]
+
+Exits non-zero if any equivalence fails — CI runs this as a tier-1 smoke.
 """
-import jax
-import jax.numpy as jnp
+import argparse
+import tempfile
+
 import numpy as np
 
-from repro.configs.registry import get_config
-from repro.data.pages import TransferStats
-from repro.models.serve import decode_step, prefill
-from repro.models.transformer import init_params
-from repro.pipeline import PageStream
+from repro.core.booster import GradientBooster
+from repro.data.dmatrix import IterDMatrix, PagedDMatrix
+from repro.serve import BatchServer, ForestServer, ServeStats
 
 
-def offload_roundtrip(cache, stats: TransferStats):
-    """Move every KV pool page to host, then stream them back to the device.
+def synthetic(n_rows: int, m: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n_rows, m)).astype(np.float32)
+    y = (X[:, 0] * 1.5 - X[:, 1] + 0.3 * X[:, 2] ** 2 > 0).astype(np.float32)
+    X[rng.random(X.shape) < 0.02] = np.nan  # exercise default directions
+    return X, y
 
-    One "page" here is pool slot p across all layers/sequences — k and v
-    stacked — so the stream restores the pool slot-by-slot with the device put
-    for slot p+1 in flight while slot p is consumed.
-    """
-    pool = cache.k_pages.shape[2]
-    host_pages = [
-        np.stack([np.asarray(cache.k_pages[:, :, p]), np.asarray(cache.v_pages[:, :, p])])
-        for p in range(pool)
-    ]
-    stream = PageStream.from_host_pages(host_pages, stats=stats, staging_depth=2)
-    restored = [sp.device for sp in stream]
-    k_pages = jnp.stack([d[0] for d in restored], axis=2)
-    v_pages = jnp.stack([d[1] for d in restored], axis=2)
-    return cache._replace(k_pages=k_pages, v_pages=v_pages)
+
+def batches(X, y, batch_rows):
+    def gen():
+        for lo in range(0, X.shape[0], batch_rows):
+            yield X[lo : lo + batch_rows], y[lo : lo + batch_rows]
+
+    return gen
 
 
 def main():
-    cfg = get_config("llama3.2-1b", reduced=True)
-    params = init_params(jax.random.PRNGKey(0), cfg)
-    rng = np.random.default_rng(0)
-    B, S, steps = 4, 48, 16
-    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="small config for CI smoke")
+    args = ap.parse_args()
 
-    logits_p, cache_paged = prefill(params, cfg, prompts, max_len=S + steps, paged=True)
-    logits_c, cache_cont = prefill(params, cfg, prompts, max_len=S + steps, paged=False)
-    print("prefill logits agree:",
-          float(jnp.abs(logits_p - logits_c).max()) < 1e-3)
+    n_rows, m, n_trees, depth = (2000, 16, 20, 4) if args.quick else (8000, 30, 60, 6)
+    X, y = synthetic(n_rows, m)
 
-    dec_paged = jax.jit(lambda t, c: decode_step(params, cfg, t, c))
-    dec_cont = jax.jit(lambda t, c: decode_step(params, cfg, t, c))
-    tok_p = tok_c = jnp.argmax(logits_p, axis=-1).astype(jnp.int32)
-    agree = True
-    outs = [tok_p]
-    for _ in range(steps - 1):
-        lp, cache_paged = dec_paged(tok_p, cache_paged)
-        lc, cache_cont = dec_cont(tok_c, cache_cont)
-        tok_p = jnp.argmax(lp, axis=-1).astype(jnp.int32)
-        tok_c = jnp.argmax(lc, axis=-1).astype(jnp.int32)
-        agree &= bool(jnp.all(tok_p == tok_c))
-        outs.append(tok_p)
-    print(f"decoded {steps - 1} tokens; paged == contiguous greedy path: {agree}")
-    print("sample continuation (seq 0):", [int(t[0]) for t in outs])
-    print("paged cache pages:", cache_paged.k_pages.shape[2],
-          f"(page_size={cache_paged.page_size})")
+    with tempfile.TemporaryDirectory() as cache_dir:
+        dm = IterDMatrix(
+            batches(X, y, 512), max_bin=64, cache_dir=cache_dir, page_bytes=16 * 1024
+        )
+        booster = GradientBooster(
+            n_estimators=n_trees, max_depth=depth, max_bin=64,
+            objective="binary:logistic",
+        )
+        booster.fit(dm)
+        paged = PagedDMatrix(cache_dir)
+        print(f"trained {n_trees} depth-{depth} trees; page cache: "
+              f"{len(paged.page_set().row_offsets)} pages, {paged.n_rows} rows")
 
-    # ---- out-of-core KV: offload the pool to host, stream it back, decode on
-    stats = TransferStats()
-    cache_restored = offload_roundtrip(cache_paged, stats)
-    l_direct, _ = dec_paged(tok_p, cache_paged)
-    l_restored, _ = dec_paged(tok_p, cache_restored)
-    same = bool(jnp.all(jnp.argmax(l_direct, -1) == jnp.argmax(l_restored, -1)))
-    print(f"KV offload->PageStream restore: decode identical: {same}")
-    print(f"  restored {stats.host_to_device_bytes / 2**20:.1f} MiB over "
-          f"{cache_paged.k_pages.shape[2]} pool pages, "
-          f"overlap ratio {stats.overlap_ratio:.2f}")
+        # 1. fused whole-forest kernel == per-tree reference, bit-for-bit
+        import jax.numpy as jnp
+
+        forest = booster.packed_forest()
+        bins = jnp.asarray(paged.single_page_bins().astype(np.int32))
+        per_tree = np.asarray(forest.predict_margin_per_tree(bins))
+        fused = np.asarray(forest.predict_margin_bins(bins))
+        assert np.array_equal(fused, per_tree), "fused kernel != per-tree reference"
+        print("fused forest kernel == per-tree reference: bit-for-bit")
+
+        # 2. streamed predict(PagedDMatrix) == in-core fused launch
+        streamed = booster.predict_margin(paged)
+        assert np.array_equal(streamed, fused), "streamed predict != in-core"
+        st = paged.stats
+        print(f"predict(PagedDMatrix) == in-core: bit-for-bit "
+              f"({st.host_to_device_bytes / 2**20:.2f} MiB staged, "
+              f"overlap ratio {st.overlap_ratio:.2f})")
+
+        # 3. paged forest: tree-chunks streamed, margins chained across chunks
+        server = ForestServer(booster, trees_per_chunk=max(n_trees // 4, 1))
+        chunked = server.predict_margin(paged)
+        assert np.array_equal(chunked, fused), "paged forest != resident forest"
+        print(f"paged forest ({server.trees_per_chunk} trees/chunk) == resident: "
+              f"bit-for-bit ({server.stats.host_to_device_bytes / 2**20:.2f} MiB "
+              "forest+row pages staged)")
+
+    # 4. request micro-batching over the packed forest
+    stats = ServeStats()
+    n_req = 256 if args.quick else 1024
+    with BatchServer(forest.predict_margin, max_batch=64, max_delay_ms=5.0,
+                     stats=stats) as srv:
+        futures = [srv.submit(X[i % n_rows]) for i in range(n_req)]
+        got = np.asarray([f.result(timeout=60.0) for f in futures], np.float32)
+    direct = forest.predict_margin(np.stack([X[i % n_rows] for i in range(n_req)]))
+    assert np.array_equal(got, direct), "batched serving != direct predict"
+    print(f"BatchServer: {stats.requests} requests in {stats.batches} batches "
+          f"(occupancy {stats.occupancy:.2f})")
+    print(f"  p50 {stats.p50_ms:.2f} ms  p99 {stats.p99_ms:.2f} ms  "
+          f"{stats.rows_per_s:,.0f} rows/s")
+    print("all serving paths agree bit-for-bit")
 
 
 if __name__ == "__main__":

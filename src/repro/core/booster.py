@@ -169,6 +169,7 @@ class GradientBooster:
         self.labels_: np.ndarray | None = None
         self.margins_: np.ndarray | None = None
         self._device_cache = None
+        self._packed_forest = None  # serving-tier cache (see packed_forest)
 
     def _make_hist_store(self, transfer_stats=None) -> HistogramStore:
         """Fresh tiered histogram store wired to this booster's policy knobs.
@@ -256,6 +257,7 @@ class GradientBooster:
         from repro.data.dmatrix import as_dmatrix
 
         p = self.params
+        self._packed_forest = None  # forest is about to change
         dm = as_dmatrix(data, y, max_bin=p.max_bin, cuts=cuts)
         decision = self.policy.decide(dm, p)
         self.decision_ = decision
@@ -555,19 +557,40 @@ class GradientBooster:
         return obj_lib.METRICS[metric](labels, preds)
 
     # -------------------------------------------------------------- predict
-    def predict_margin(self, X: np.ndarray, iteration_range: tuple[int, int] | None = None) -> np.ndarray:
+    def packed_forest(self, iteration_range: tuple[int, int] | None = None):
+        """The serving-tier view of this forest (`repro.serve.PackedForest`):
+        flat (T, n_total) arrays predicted by one fused launch. Cached per
+        forest length; explicit ``iteration_range`` packs fresh."""
+        from repro.serve.forest import PackedForest
+
+        if iteration_range is not None:
+            return PackedForest.from_booster(self, iteration_range)
+        if self._packed_forest is None or self._packed_forest.n_trees != len(self.trees):
+            self._packed_forest = PackedForest.from_booster(self)
+        return self._packed_forest
+
+    def predict_margin(
+        self, X, iteration_range: tuple[int, int] | None = None
+    ) -> np.ndarray:
+        """Margins via the fused serving tier — the front door mirrors ``fit``:
+        raw ndarrays predict in one whole-forest launch; a DMatrix streams its
+        ELLPACK pages through `PageStream` (out-of-core prediction). Both are
+        bit-for-bit the per-tree reference loop
+        (`PackedForest.predict_margin_per_tree`)."""
         from repro.core.ellpack import bin_batch
 
         assert self.cuts is not None, "not fitted"
-        bins = jnp.asarray(bin_batch(np.asarray(X), self.cuts).astype(np.int32))
-        lo, hi = iteration_range or (0, len(self.trees))
-        margin = jnp.full(X.shape[0], self.base_margin_, jnp.float32)
-        md = self.params.max_depth
-        for tree in self.trees[lo:hi]:
-            margin = margin + self.params.learning_rate * predict_tree_bins(tree, bins, md)
-        return np.asarray(margin)
+        forest = self.packed_forest(iteration_range)
+        impl = self.params.kernel_impl
+        if hasattr(X, "page_set"):  # DMatrix: the streaming serving path
+            from repro.serve.engine import predict_margin_dmatrix
 
-    def predict(self, X: np.ndarray, output_margin: bool = False) -> np.ndarray:
+            return predict_margin_dmatrix(forest, X, impl=impl)
+        bins = jnp.asarray(bin_batch(np.asarray(X), self.cuts).astype(np.int32))
+        return np.asarray(forest.predict_margin_bins(bins, impl=impl))
+
+    def predict(self, X, output_margin: bool = False) -> np.ndarray:
+        """Predictions for raw feature rows or any DMatrix (mirrors ``fit``)."""
         margin = self.predict_margin(X)
         if output_margin:
             return margin

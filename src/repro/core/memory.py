@@ -119,6 +119,38 @@ class DeviceMemoryModel:
             + kept * self.row_state_bytes
         )
 
+    # ----- serving working set (repro.serve) -----
+    @property
+    def forest_node_bytes(self) -> int:
+        """One packed forest node in device staging layout: 6 f32/int32
+        planes (feature, split_bin, split_value, default_left, is_leaf,
+        leaf_value — `serve.forest._PAGE_FIELDS`)."""
+        return 6 * 4
+
+    def packed_forest_bytes(self, n_trees: int, max_depth: int | None = None) -> int:
+        """Device bytes of a `PackedForest` of ``n_trees`` complete-layout
+        trees (the serving analogue of the matrix term)."""
+        d = self.max_depth if max_depth is None else max_depth
+        return n_trees * (2 ** (d + 1) - 1) * self.forest_node_bytes
+
+    def serve_batch_bytes(self, batch_rows: int) -> int:
+        """Per-launch row-side working set: the staged bins page (int32 on
+        device — the uint8 ELLPACK upcasts device-side) + running margins."""
+        return batch_rows * (4 * self.num_features + 4)
+
+    def serve_bytes(self, batch_rows: int, n_trees: int, max_depth: int | None = None) -> int:
+        """One serving launch's device working set: forest + batch."""
+        return self.packed_forest_bytes(n_trees, max_depth) + self.serve_batch_bytes(batch_rows)
+
+    def max_trees_resident(self, batch_rows: int, max_depth: int | None = None) -> int:
+        """Most trees that fit on-device next to one ``batch_rows`` page —
+        the paged-forest chunk size (`repro.serve.engine`); forests beyond it
+        stream tree-chunks through PageStream."""
+        d = self.max_depth if max_depth is None else max_depth
+        per_tree = (2 ** (d + 1) - 1) * self.forest_node_bytes
+        budget = self.hbm_bytes - self.serve_batch_bytes(batch_rows)
+        return max(0, budget // per_tree)
+
     # ----- closed-form max rows per mode (Table 1) -----
     def max_rows_in_core(self) -> int:
         per_row = self.num_features + self.row_state_bytes + 8

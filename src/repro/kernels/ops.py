@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ellpack_bin as _ellpack_bin
+from repro.kernels import forest as _forest
 from repro.kernels import histogram as _histogram
 from repro.kernels import partition as _partition
 from repro.kernels import ref as _ref
@@ -38,6 +39,7 @@ _ref_build_histogram = jax.jit(_ref.build_histogram, static_argnames=("n_nodes",
 _ref_bin_values = jax.jit(_ref.bin_values)
 _ref_partition_rows = jax.jit(_ref.partition_rows)
 _ref_predict_bins = jax.jit(_ref.predict_bins, static_argnames=("max_depth",))
+_ref_predict_forest = jax.jit(_ref.predict_forest_bins, static_argnames=("max_depth",))
 
 
 def build_histogram(
@@ -124,4 +126,40 @@ def partition_rows(
 def predict_bins(bins, feature, split_bin, default_left, is_leaf, leaf_value, max_depth: int):
     return _ref_predict_bins(
         bins, feature, split_bin, default_left, is_leaf, leaf_value, max_depth=max_depth
+    )
+
+
+def predict_forest(
+    bins,
+    feature,  # (T, n_total) — stacked forest arrays, one launch for all T trees
+    split_bin,
+    default_left,
+    is_leaf,
+    leaf_value,
+    max_depth: int,
+    learning_rate: float,
+    margin_in,
+    impl: str = "auto",
+):
+    """Fused batched forest traversal (serving hot path).
+
+    Accumulates ``margin_in + lr * leaf_t`` in tree order. The leaf table is
+    scaled by the learning rate HERE, eagerly — inside a jit'd kernel XLA
+    would contract the multiply-add into an FMA and round differently than
+    the eager per-tree loop. Pre-scaling makes every accumulation a pure add
+    (adds cannot fuse), so the fused kernel, the jnp oracle, and the chunked
+    paged-forest path (which chains ``margin_in`` across chunks) are all
+    bit-for-bit the per-tree reference.
+    """
+    if feature.shape[0] == 0:  # empty forest/chunk: margins pass through
+        return jnp.asarray(margin_in, jnp.float32)
+    scaled_leaf = jnp.float32(learning_rate) * jnp.asarray(leaf_value, jnp.float32)
+    if _resolve(impl) == "pallas":
+        return _forest.predict_forest(
+            bins, feature, split_bin, default_left, is_leaf, scaled_leaf,
+            max_depth, margin_in,
+        )
+    return _ref_predict_forest(
+        bins, feature, split_bin, default_left, is_leaf, scaled_leaf,
+        max_depth=max_depth, margin_in=margin_in,
     )

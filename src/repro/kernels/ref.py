@@ -131,3 +131,36 @@ def predict_bins(
 
     pos, _ = jax.lax.scan(step, pos, None, length=max_depth)
     return leaf_value[pos]
+
+
+def predict_forest_bins(
+    bins: jax.Array,  # (n_rows, m) int32
+    feature: jax.Array,  # (T, n_nodes) int32
+    split_bin: jax.Array,  # (T, n_nodes) int32
+    default_left: jax.Array,  # (T, n_nodes) bool
+    is_leaf: jax.Array,  # (T, n_nodes) bool
+    leaf_value: jax.Array,  # (T, n_nodes) f32, PRE-SCALED by the learning rate
+    max_depth: int,
+    margin_in: jax.Array,  # (n_rows,) f32 running margin (base, or a prior chunk's)
+) -> jax.Array:
+    """Fused forest traversal: whole forest in one launch, margins accumulated
+    tree-by-tree in forest order.
+
+    ``leaf_value`` arrives pre-scaled by the learning rate (`kernels.ops`
+    scales the table eagerly, outside jit) so the scan body is a pure add —
+    XLA cannot re-fuse a multiply-add into an FMA and change the rounding.
+    That makes this bit-for-bit identical to the eager per-tree Python loop,
+    and lets the chunked paged-forest path chain ``margin_in`` across chunks
+    without perturbing the accumulation order.
+    """
+    n_rows = bins.shape[0]
+
+    def per_tree(margin, tree):
+        feat, sbin, dleft, leaf, lval = tree
+        pred = predict_bins(bins, feat, sbin, dleft, leaf, lval, max_depth)
+        return margin + pred, None
+
+    margin, _ = jax.lax.scan(
+        per_tree, margin_in, (feature, split_bin, default_left, is_leaf, leaf_value)
+    )
+    return margin

@@ -1,4 +1,11 @@
-"""Serving driver: batched prefill + decode for any assigned arch.
+"""Serving driver: forest serving (BatchServer) or LM prefill+decode.
+
+Forest mode — load a `GradientBooster.save` checkpoint and serve single-row
+requests through the request micro-batcher, printing the ServeStats ledger:
+
+    PYTHONPATH=src python -m repro.launch.serve --forest ckpt/ --requests 2048
+
+LM mode — batched prefill + decode for any assigned arch:
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --tokens 16 --paged
 """
@@ -7,24 +14,54 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.registry import LM_ARCHS, get_config
-from repro.models.serve import decode_step, prefill
-from repro.models.transformer import init_params
+
+def serve_forest(args) -> None:
+    """Micro-batched single-row serving over a checkpointed forest."""
+    from repro.core.booster import GradientBooster
+    from repro.serve import BatchServer, ForestServer, ServeStats
+
+    booster = GradientBooster.load(args.forest)
+    server = ForestServer(booster, trees_per_chunk=args.trees_per_chunk)
+    forest = server.forest
+    print(f"loaded forest: {forest.n_trees} trees, depth {forest.max_depth}, "
+          f"{forest.nbytes / 2**20:.2f} MiB packed "
+          f"({forest.cuts.num_features} features)")
+
+    rng = np.random.default_rng(args.seed)
+    rows = rng.normal(size=(args.requests, forest.cuts.num_features)).astype(np.float32)
+
+    # warm the jit cache so latency quantiles measure traffic, not compiles
+    server.predict_margin(rows[: args.max_batch])
+
+    stats = ServeStats()
+    with BatchServer(
+        server.predict_margin, max_batch=args.max_batch,
+        max_delay_ms=args.max_delay_ms, stats=stats,
+    ) as srv:
+        futures = [srv.submit(r) for r in rows]
+        preds = np.asarray([f.result(timeout=120.0) for f in futures], np.float32)
+    assert np.array_equal(preds, server.predict_margin(rows).astype(np.float32)), \
+        "batched serving diverged from direct predict"
+
+    print(f"served {stats.requests} requests in {stats.batches} batches "
+          f"(max_batch={args.max_batch}, deadline={args.max_delay_ms} ms)")
+    print(f"  occupancy {stats.occupancy:.2f}  padded rows {stats.padded_rows}")
+    print(f"  p50 {stats.p50_ms:.2f} ms  p99 {stats.p99_ms:.2f} ms  "
+          f"{stats.rows_per_s:,.0f} rows/s")
+    if server.stats.host_to_device_bytes:
+        print(f"  forest paging: {server.stats.host_to_device_bytes / 2**20:.2f} MiB "
+              "tree-chunk traffic")
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=LM_ARCHS)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--tokens", type=int, default=16)
-    ap.add_argument("--paged", action="store_true")
-    ap.add_argument("--full", action="store_true")
-    args = ap.parse_args()
+def serve_lm(args) -> None:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs.registry import get_config
+    from repro.models.serve import decode_step, prefill
+    from repro.models.transformer import init_params
 
     cfg = get_config(args.arch, reduced=not args.full)
     params = init_params(jax.random.PRNGKey(0), cfg)
@@ -58,6 +95,36 @@ def main():
           f"({args.tokens*args.batch/dt:.1f} tok/s)")
     first = [int(np.asarray(t).reshape(args.batch, -1)[0, 0]) for t in out]
     print("greedy continuation (seq 0):", first)
+
+
+def main():
+    from repro.configs.registry import LM_ARCHS
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    # forest mode
+    ap.add_argument("--forest", help="GradientBooster checkpoint dir to serve")
+    ap.add_argument("--requests", type=int, default=1024)
+    ap.add_argument("--max-batch", type=int, default=256)
+    ap.add_argument("--max-delay-ms", type=float, default=2.0)
+    ap.add_argument("--trees-per-chunk", type=int, default=None,
+                    help="page the forest in chunks of this many trees")
+    ap.add_argument("--seed", type=int, default=0)
+    # LM mode
+    ap.add_argument("--arch", choices=LM_ARCHS,
+                    help="LM arch to serve (ignored with --forest)")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--paged", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+
+    if args.forest:
+        serve_forest(args)
+    elif args.arch:
+        serve_lm(args)
+    else:
+        ap.error("pass --forest <checkpoint dir> or --arch <lm arch>")
 
 
 if __name__ == "__main__":

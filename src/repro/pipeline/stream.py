@@ -23,7 +23,9 @@ precisely that this ratio can approach the ideal.
 
 Consumers: `ExternalGradientBooster` (Alg. 6 streaming build, Alg. 7 margin
 update), `distributed.gbdt_shard.grow_tree_distributed_paged` (sharded
-staging), and the paged-KV offload path in `examples/serve_paged.py`.
+staging), and the serving tier (`repro.serve.engine` streams both row pages
+and paged-forest tree-chunks through this engine; see
+`examples/serve_paged.py`).
 """
 from __future__ import annotations
 

@@ -1,0 +1,35 @@
+"""repro.serve — the low-latency batched forest-serving tier.
+
+Training has an out-of-core story (PageStream, tiered histograms); this
+package is the matching inference story, built for the ROADMAP's
+"millions of users" target:
+
+  `PackedForest`   a fitted booster flattened into (T, n_total) arrays and
+                   predicted by ONE fused traversal launch per forest
+                   (`kernels/forest.py` Pallas kernel on TPU, the jit'd scan
+                   oracle elsewhere) instead of a per-tree Python loop;
+  `ForestServer` / out-of-core prediction: rows stream as ELLPACK pages and
+  `predict_*`      forests larger than the device budget page tree-chunks
+                   through the same `repro.pipeline.PageStream` engine, with
+                   partial margins chained chunk-to-chunk so the result is
+                   bit-for-bit the in-core forest's;
+  `BatchServer`    request micro-batcher: single-row requests coalesce into
+                   padded fixed-shape batches under a deadline;
+  `ServeStats`     the serving ledger (p50/p99 latency, batch occupancy,
+                   rows/s) mirroring `TransferStats` for training traffic.
+
+`GradientBooster.predict` is the front door (it packs and caches the forest);
+`benchmarks/serving_latency.py` records the latency/throughput trajectory in
+`BENCH_serving.json`, CI-gated like `BENCH_kernels.json`.
+"""
+from repro.serve.batcher import BatchServer, ServeStats
+from repro.serve.engine import ForestServer, predict_margin_dmatrix
+from repro.serve.forest import PackedForest
+
+__all__ = [
+    "BatchServer",
+    "ForestServer",
+    "PackedForest",
+    "ServeStats",
+    "predict_margin_dmatrix",
+]

@@ -1,0 +1,210 @@
+"""Out-of-core forest serving: stream rows, stream trees, never OOM.
+
+Two independent axes can exceed the device budget at prediction time, and both
+page through the same `repro.pipeline.PageStream` engine training uses:
+
+  rows    a `PagedDMatrix` (or any DMatrix) streams its ELLPACK pages with
+          prefetch + double-buffered staging; each page gets one fused
+          whole-forest launch and its margins land in a host array;
+  trees   a forest larger than the device budget is split into tree-chunks
+          (`PackedForest.pack_page` — one f32 ndarray per chunk, the page
+          shape PageStream stages); chunks run outermost with each row-window's
+          margin chained chunk-to-chunk (``margin_in``), so the partial-sum
+          accumulation order is exactly the in-core forest's — bit-for-bit.
+
+Chunk sizing comes from `DeviceMemoryModel.max_trees_resident`: the serving
+analogue of the training-mode decision procedure (Table-1 byte model). All
+boundary traffic lands in the caller's `TransferStats` — forest pages count as
+host->device bytes next to row pages.
+
+`ForestServer` bundles a packed forest with this machinery behind
+``predict``/``predict_margin`` front doors; `GradientBooster.predict`
+delegates here for DMatrix inputs.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import objectives as obj_lib
+from repro.core.memory import DeviceMemoryModel
+from repro.data.pages import TransferStats
+from repro.pipeline import PageStream
+from repro.serve.forest import PackedForest
+
+
+def _forest_stream(
+    forest: PackedForest,
+    trees_per_chunk: int,
+    stats: TransferStats,
+    staging_depth: int = 2,
+) -> PageStream:
+    """The forest's tree-chunks as a PageStream (host RAM pages, double-
+    buffered staging; chunk k+1's device put overlaps chunk k's traversal)."""
+    extents = [
+        (lo, min(lo + trees_per_chunk, forest.n_trees))
+        for lo in range(0, forest.n_trees, trees_per_chunk)
+    ]
+    pages = [forest.pack_page(lo, hi) for lo, hi in extents]
+    return PageStream.from_host_pages(
+        pages, stats=stats, cache_tag="forest", staging_depth=staging_depth
+    )
+
+
+def resolve_trees_per_chunk(
+    forest: PackedForest,
+    batch_rows: int,
+    model: DeviceMemoryModel | None,
+    trees_per_chunk: int | None,
+) -> int | None:
+    """How many trees fit per launch — None means the whole forest does.
+
+    An explicit ``trees_per_chunk`` wins (0/None-model means never page);
+    otherwise the byte model decides, mirroring how `ExecutionPolicy` picks
+    the training mode from the same `DeviceMemoryModel`.
+    """
+    if trees_per_chunk is not None:
+        return trees_per_chunk if trees_per_chunk < forest.n_trees else None
+    if model is None:
+        return None
+    depth = forest.max_depth
+    resident = model.max_trees_resident(batch_rows, max_depth=depth)
+    if resident >= forest.n_trees:
+        return None
+    if resident < 1:
+        raise ValueError(
+            f"serving byte model fits no tree at all: batch_rows={batch_rows} "
+            f"rows leave {model.hbm_bytes} bytes short of one depth-{depth} "
+            "tree; shrink the batch or raise the budget"
+        )
+    return resident
+
+
+def predict_margin_dmatrix(
+    forest: PackedForest,
+    dm,
+    *,
+    model: DeviceMemoryModel | None = None,
+    trees_per_chunk: int | None = None,
+    prefetch_depth: int = 2,
+    staging_depth: int = 2,
+    impl: str = "auto",
+    stats: TransferStats | None = None,
+) -> np.ndarray:
+    """Margins for every row of a DMatrix, streaming pages (and tree-chunks).
+
+    Bit-for-bit the in-core fused forest over `single_page_bins()`: row pages
+    partition the batch (per-row work is independent) and tree-chunks chain
+    their partial margins in tree order.
+    """
+    pages = dm.page_set()
+    stats = stats if stats is not None else pages.stats
+    margins = np.full(pages.n_rows, forest.base_margin, np.float32)
+    if pages.n_rows == 0:
+        return margins
+    batch_rows = max(nr for _, nr in pages.page_extents)
+    chunk = resolve_trees_per_chunk(forest, batch_rows, model, trees_per_chunk)
+
+    def data_stream() -> PageStream:
+        return pages.stream(
+            prefetch_depth=prefetch_depth, staging_depth=staging_depth
+        )
+
+    if chunk is None:
+        for sp in data_stream():
+            ro, nr = sp.host.row_offset, sp.host.n_rows
+            out = forest.predict_margin_bins(
+                sp.device, margin_in=jnp.asarray(margins[ro : ro + nr]), impl=impl
+            )
+            margins[ro : ro + nr] = np.asarray(out)
+        return margins
+
+    # paged forest: chunks outermost so each row's margin accumulates in tree
+    # order across chunks (margin_in chaining keeps it bit-exact); each chunk
+    # re-streams the row pages — the transfer bill is chunks x pages, which is
+    # what the TransferStats ledger will show
+    from repro.kernels import ops
+
+    for fp in _forest_stream(forest, chunk, stats, staging_depth=staging_depth):
+        arrays = PackedForest.unpack_page(fp.device)
+        for sp in data_stream():
+            ro, nr = sp.host.row_offset, sp.host.n_rows
+            out = ops.predict_forest(
+                sp.device,
+                arrays["feature"], arrays["split_bin"], arrays["default_left"],
+                arrays["is_leaf"], arrays["leaf_value"],
+                forest.max_depth, forest.learning_rate,
+                jnp.asarray(margins[ro : ro + nr]), impl=impl,
+            )
+            margins[ro : ro + nr] = np.asarray(out)
+    return margins
+
+
+class ForestServer:
+    """A packed forest plus its serving policy, behind one predict surface.
+
+    Accepts a fitted `GradientBooster` or a ready `PackedForest`. ``model``
+    (a `DeviceMemoryModel`) turns on byte-budgeted forest paging exactly like
+    `ExecutionPolicy` budgets training; ``trees_per_chunk`` forces a chunk
+    size. All transfer traffic lands on ``self.stats``.
+    """
+
+    def __init__(
+        self,
+        forest_or_booster,
+        *,
+        model: DeviceMemoryModel | None = None,
+        trees_per_chunk: int | None = None,
+        impl: str = "auto",
+        stats: TransferStats | None = None,
+    ):
+        self.forest = (
+            forest_or_booster
+            if isinstance(forest_or_booster, PackedForest)
+            else PackedForest.from_booster(forest_or_booster)
+        )
+        self.model = model
+        self.trees_per_chunk = trees_per_chunk
+        self.impl = impl
+        self.stats = stats if stats is not None else TransferStats()
+        self.objective = obj_lib.get_objective(self.forest.objective)
+
+    # ----------------------------------------------------------- prediction
+    def predict_margin(self, data) -> np.ndarray:
+        """Margins for raw feature rows (ndarray) or any DMatrix."""
+        if hasattr(data, "page_set"):  # DMatrix: stream its pages
+            return predict_margin_dmatrix(
+                self.forest, data, model=self.model,
+                trees_per_chunk=self.trees_per_chunk, impl=self.impl,
+                stats=self.stats,
+            )
+        X = np.asarray(data)
+        forest = self.forest
+        chunk = resolve_trees_per_chunk(
+            forest, X.shape[0], self.model, self.trees_per_chunk
+        )
+        if chunk is None:
+            return forest.predict_margin(X, impl=self.impl)
+        from repro.core.ellpack import bin_batch
+        from repro.kernels import ops
+
+        if forest.cuts is None:
+            raise ValueError("PackedForest has no cuts; predict from bins instead")
+        bins = jnp.asarray(bin_batch(X, forest.cuts).astype(np.int32))
+        margin = jnp.full(X.shape[0], forest.base_margin, jnp.float32)
+        for fp in _forest_stream(forest, chunk, self.stats):
+            arrays = PackedForest.unpack_page(fp.device)
+            margin = ops.predict_forest(
+                bins,
+                arrays["feature"], arrays["split_bin"], arrays["default_left"],
+                arrays["is_leaf"], arrays["leaf_value"],
+                forest.max_depth, forest.learning_rate, margin, impl=self.impl,
+            )
+        return np.asarray(margin)
+
+    def predict(self, data, output_margin: bool = False) -> np.ndarray:
+        margin = self.predict_margin(data)
+        if output_margin:
+            return margin
+        return np.asarray(self.objective.transform(jnp.asarray(margin)))

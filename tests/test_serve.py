@@ -1,0 +1,366 @@
+"""Serving tier: packed-forest oracle equivalence, paging, micro-batching.
+
+The load-bearing invariant is EXACT (bitwise) agreement between every serving
+path and the per-tree reference loop: the fused jnp scan, the Pallas kernel,
+the streamed `predict(PagedDMatrix)`, and the tree-chunked paged forest all
+perform the identical f32 op sequence, so equality is `array_equal`, never
+allclose.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.booster import GradientBooster
+from repro.core.ellpack import bin_batch
+from repro.core.memory import DeviceMemoryModel
+from repro.serve import BatchServer, ForestServer, PackedForest, ServeStats
+from repro.serve.engine import predict_margin_dmatrix, resolve_trees_per_chunk
+
+from conftest import MAX_BIN, MAX_DEPTH
+
+
+def _fit(X, y, **kw):
+    params = dict(
+        n_estimators=8, max_depth=MAX_DEPTH, max_bin=MAX_BIN,
+        objective="binary:logistic",
+    )
+    params.update(kw)
+    return GradientBooster(**params).fit(X, y)
+
+
+@pytest.fixture(scope="module")
+def depthwise(small_classification):
+    X, y = small_classification
+    return X, y, _fit(X, y)
+
+
+@pytest.fixture(scope="module")
+def lossguide(small_classification):
+    X, y = small_classification
+    return X, y, _fit(X, y, grow_policy="lossguide", max_leaves=5, max_depth=4)
+
+
+def _bins(booster, X):
+    return jnp.asarray(bin_batch(np.asarray(X), booster.cuts).astype(np.int32))
+
+
+# --------------------------------------------------------------- oracle suite
+@pytest.mark.parametrize("grower", ["depthwise", "lossguide"])
+def test_fused_matches_per_tree_bitwise(grower, request):
+    X, _, booster = request.getfixturevalue(grower)
+    forest = booster.packed_forest()
+    bins = _bins(booster, X)
+    per_tree = np.asarray(forest.predict_margin_per_tree(bins))
+    fused = np.asarray(forest.predict_margin_bins(bins, impl="ref"))
+    assert np.array_equal(fused, per_tree)
+
+
+@pytest.mark.parametrize("grower", ["depthwise", "lossguide"])
+def test_pallas_matches_per_tree_bitwise(grower, request):
+    X, _, booster = request.getfixturevalue(grower)
+    forest = booster.packed_forest()
+    bins = _bins(booster, X)
+    per_tree = np.asarray(forest.predict_margin_per_tree(bins))
+    pallas = np.asarray(forest.predict_margin_bins(bins, impl="pallas"))
+    assert np.array_equal(pallas, per_tree)
+
+
+def test_predict_front_door_matches(depthwise):
+    X, _, booster = depthwise
+    forest = booster.packed_forest()
+    margins = booster.predict_margin(X)
+    assert np.array_equal(
+        margins, np.asarray(forest.predict_margin_per_tree(_bins(booster, X)))
+    )
+    proba = booster.predict(X)
+    assert proba.min() >= 0.0 and proba.max() <= 1.0  # logistic transform
+    assert np.array_equal(booster.predict(X, output_margin=True), margins)
+
+
+def test_iteration_range(depthwise):
+    X, _, booster = depthwise
+    bins = _bins(booster, X)
+    sub = booster.packed_forest(iteration_range=(2, 5))
+    assert sub.n_trees == 3
+    assert np.array_equal(
+        np.asarray(sub.predict_margin_bins(bins)),
+        np.asarray(sub.predict_margin_per_tree(bins)),
+    )
+    empty = booster.packed_forest(iteration_range=(3, 3))
+    out = np.asarray(empty.predict_margin_bins(bins))
+    assert np.array_equal(out, np.full(bins.shape[0], booster.base_margin_, np.float32))
+
+
+def test_packed_forest_cached_and_invalidated(depthwise):
+    X, y, booster = depthwise
+    f1 = booster.packed_forest()
+    assert booster.packed_forest() is f1  # cached
+    b2 = _fit(X, y, n_estimators=2)
+    f2 = b2.packed_forest()
+    b2.fit(X, y)  # refit (training continuation) invalidates the cache
+    assert b2.packed_forest() is not f2
+    assert b2.packed_forest().n_trees == len(b2.trees)
+
+
+# ------------------------------------------------------------ streamed paging
+def test_predict_paged_dmatrix_streams(tmp_path, depthwise):
+    from repro.data.dmatrix import IterDMatrix, PagedDMatrix
+
+    X, y, booster = depthwise
+
+    def batches():
+        for lo in range(0, X.shape[0], 128):
+            yield X[lo : lo + 128], y[lo : lo + 128]
+
+    IterDMatrix(
+        batches, max_bin=MAX_BIN, cuts=booster.cuts,
+        cache_dir=str(tmp_path), page_bytes=1024,
+    )
+    paged = PagedDMatrix(str(tmp_path))
+    in_core = np.asarray(
+        booster.packed_forest().predict_margin_bins(_bins(booster, X))
+    )
+    streamed = booster.predict_margin(paged)
+    assert np.array_equal(streamed, in_core)
+    assert paged.stats.host_to_device_bytes > 0  # pages actually staged
+    assert len(paged.page_set().row_offsets) > 1  # actually paged
+
+
+@pytest.mark.parametrize("trees_per_chunk", [1, 3])
+def test_paged_forest_chunks_bitwise(depthwise, trees_per_chunk):
+    from repro.data.dmatrix import ArrayDMatrix
+
+    X, y, booster = depthwise
+    dm = ArrayDMatrix(X, y, max_bin=MAX_BIN, cuts=booster.cuts, page_bytes=2048)
+    forest = booster.packed_forest()
+    whole = predict_margin_dmatrix(forest, dm)
+    chunked = predict_margin_dmatrix(forest, dm, trees_per_chunk=trees_per_chunk)
+    assert np.array_equal(chunked, whole)
+
+
+def test_forest_server_paging_and_stats(depthwise):
+    X, _, booster = depthwise
+    server = ForestServer(booster, trees_per_chunk=2)
+    direct = booster.predict_margin(X)
+    assert np.array_equal(server.predict_margin(X), direct)
+    assert server.stats.host_to_device_bytes > 0  # forest chunks staged
+    assert np.array_equal(server.predict(X, output_margin=True), direct)
+
+
+def test_memory_model_resolves_chunk(depthwise):
+    X, _, booster = depthwise
+    forest = booster.packed_forest()
+    # generous budget: whole forest resident
+    big = DeviceMemoryModel(num_features=X.shape[1], max_depth=MAX_DEPTH)
+    assert resolve_trees_per_chunk(forest, 512, big, None) is None
+    # budget that fits the batch plus only a few trees: must page
+    per_tree = big.packed_forest_bytes(1, MAX_DEPTH)
+    tight = DeviceMemoryModel(
+        hbm_bytes=big.serve_batch_bytes(512) + 3 * per_tree,
+        num_features=X.shape[1], max_depth=MAX_DEPTH,
+    )
+    chunk = resolve_trees_per_chunk(forest, 512, tight, None)
+    assert chunk == 3
+    server = ForestServer(booster, model=tight)
+    assert np.array_equal(server.predict_margin(X), booster.predict_margin(X))
+    # budget too small for even one tree: explicit failure, not silent OOM
+    none_fits = DeviceMemoryModel(
+        hbm_bytes=big.serve_batch_bytes(512), num_features=X.shape[1],
+        max_depth=MAX_DEPTH,
+    )
+    with pytest.raises(ValueError, match="no tree"):
+        resolve_trees_per_chunk(forest, 512, none_fits, None)
+
+
+def test_empty_forest_chunk_passthrough():
+    from repro.kernels import ops
+
+    margin = jnp.asarray(np.float32([1.5, -2.0]))
+    bins = jnp.zeros((2, 4), jnp.int32)
+    empty = jnp.zeros((0, 7))
+    out = ops.predict_forest(
+        bins, empty.astype(jnp.int32), empty.astype(jnp.int32),
+        empty.astype(bool), empty.astype(bool), empty.astype(jnp.float32),
+        2, 0.3, margin,
+    )
+    assert np.array_equal(np.asarray(out), np.asarray(margin))
+
+
+# ------------------------------------------------------- hypothesis property
+def test_padded_ragged_batches_property(depthwise):
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+    X, _, booster = depthwise
+    forest = booster.packed_forest()
+    m = X.shape[1]
+
+    @hyp.settings(max_examples=25, deadline=None)
+    @hyp.given(n_rows=st.integers(1, 300), seed=st.integers(0, 2**31 - 1))
+    def check(n_rows, seed):
+        # ragged row counts exercise the kernel's row-tile padding; bin
+        # values cover the full range including MISSING_BIN
+        rng = np.random.default_rng(seed)
+        vals = rng.integers(0, MAX_BIN, (n_rows, m)).astype(np.int32)
+        vals[rng.random(vals.shape) < 0.1] = 255  # MISSING_BIN
+        bins = jnp.asarray(vals)
+        per_tree = np.asarray(forest.predict_margin_per_tree(bins))
+        assert np.array_equal(
+            np.asarray(forest.predict_margin_bins(bins, impl="ref")), per_tree
+        )
+        assert np.array_equal(
+            np.asarray(forest.predict_margin_bins(bins, impl="pallas")), per_tree
+        )
+
+    check()
+
+
+# ------------------------------------------------------------- micro-batcher
+def test_batch_server_matches_direct(depthwise):
+    X, _, booster = depthwise
+    forest = booster.packed_forest()
+    stats = ServeStats()
+    with BatchServer(
+        forest.predict_margin, max_batch=32, max_delay_ms=5.0, stats=stats
+    ) as srv:
+        futures = [srv.submit(X[i]) for i in range(100)]
+        got = np.asarray([f.result(timeout=60.0) for f in futures], np.float32)
+    assert np.array_equal(got, forest.predict_margin(X[:100]).astype(np.float32))
+    assert stats.requests == 100
+    assert stats.rows == 100
+    assert stats.batches >= 4  # 100 rows / 32 max_batch
+    assert stats.padded_rows == stats.batches * 32 - 100
+    assert 0.0 < stats.occupancy <= 1.0
+    assert stats.p50_ms > 0.0 and stats.p99_ms >= stats.p50_ms
+    assert stats.rows_per_s > 0.0
+    assert stats.wall_seconds > 0.0
+
+
+def test_batch_server_deadline_flush(depthwise):
+    X, _, booster = depthwise
+    forest = booster.packed_forest()
+    stats = ServeStats()
+    with BatchServer(
+        forest.predict_margin, max_batch=64, max_delay_ms=10.0, stats=stats
+    ) as srv:
+        # far fewer rows than max_batch: only the deadline can flush this
+        out = srv.predict_one(X[0], timeout=30.0)
+    assert np.float32(out) == forest.predict_margin(X[:1]).astype(np.float32)[0]
+    assert stats.batches == 1
+    assert stats.padded_rows == 63
+
+
+def test_batch_server_delivers_errors():
+    def boom(rows):
+        raise RuntimeError("kernel exploded")
+
+    with BatchServer(boom, max_batch=4, max_delay_ms=1.0) as srv:
+        fut = srv.submit(np.zeros(3, np.float32))
+        with pytest.raises(RuntimeError, match="kernel exploded"):
+            fut.result(timeout=30.0)
+
+
+def test_batch_server_rejects_bad_input(depthwise):
+    X, _, booster = depthwise
+    srv = BatchServer(booster.packed_forest().predict_margin, max_batch=8)
+    try:
+        with pytest.raises(ValueError, match="single feature row"):
+            srv.submit(X[:2])
+    finally:
+        srv.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        srv.submit(X[0])
+    with pytest.raises(ValueError, match="max_batch"):
+        BatchServer(lambda r: r, max_batch=0)
+
+
+def test_serve_stats_reset():
+    stats = ServeStats()
+    stats.record_batch(3, 1, 0.01, [0.001, 0.002, 0.003])
+    stats.wall_seconds = 0.5
+    assert stats.requests == 3 and stats.occupancy == 0.75
+    stats.reset()
+    assert stats.requests == 0 and stats.latencies_s == []
+    assert stats.occupancy == 0.0 and stats.rows_per_s == 0.0
+
+
+# ---------------------------------------------------------------- byte model
+def test_memory_model_serving_terms():
+    model = DeviceMemoryModel(num_features=10, max_depth=3)
+    assert model.packed_forest_bytes(4) == 4 * 15 * 24
+    assert model.serve_batch_bytes(100) == 100 * 44
+    assert model.serve_bytes(100, 4) == 4 * 15 * 24 + 100 * 44
+    # monotone: more rows resident -> fewer trees fit
+    assert model.max_trees_resident(10) >= model.max_trees_resident(10_000)
+
+
+def test_packed_forest_pack_page_roundtrip(depthwise):
+    _, _, booster = depthwise
+    forest = booster.packed_forest()
+    page = forest.pack_page(1, 4)
+    assert page.shape == (6, 3, forest.n_total)
+    arrays = PackedForest.unpack_page(jnp.asarray(page))
+    chunk = forest.chunk(1, 4)
+    for name in ("feature", "split_bin", "default_left", "is_leaf", "leaf_value"):
+        assert np.array_equal(np.asarray(arrays[name]), np.asarray(getattr(chunk, name)))
+
+
+def test_forest_server_dmatrix_and_transform(depthwise):
+    X, _, booster = depthwise
+    from repro.data.dmatrix import ArrayDMatrix
+
+    dm = ArrayDMatrix(X, max_bin=MAX_BIN, cuts=booster.cuts, page_bytes=16 * 1024)
+    server = ForestServer(booster)
+    # DMatrix route streams pages; ndarray route fuses in-core — same margins
+    assert np.array_equal(server.predict_margin(dm), booster.predict_margin(X))
+    assert np.array_equal(server.predict_margin(X), booster.predict_margin(X))
+    # probability transform matches the booster front door
+    assert np.array_equal(server.predict(X), booster.predict(X))
+
+
+def test_zero_row_dmatrix_returns_base_margins(depthwise):
+    X, _, booster = depthwise
+    from repro.data.dmatrix import ArrayDMatrix
+
+    dm = ArrayDMatrix(X[:0], max_bin=MAX_BIN, cuts=booster.cuts)
+    forest = booster.packed_forest()
+    out = predict_margin_dmatrix(forest, dm)
+    assert out.shape == (0,) and out.dtype == np.float32
+
+
+def test_forest_requires_cuts_and_trees(depthwise):
+    import dataclasses
+
+    X, _, booster = depthwise
+    blind = dataclasses.replace(booster.packed_forest(), cuts=None)
+    with pytest.raises(ValueError, match="no cuts"):
+        blind.predict_margin(X)
+    with pytest.raises(ValueError, match="no cuts"):
+        ForestServer(blind, trees_per_chunk=1).predict_margin(X)
+    with pytest.raises(ValueError, match="no trees"):
+        PackedForest.from_booster(GradientBooster(n_estimators=1))
+
+
+def test_packed_forest_nbytes(depthwise):
+    _, _, booster = depthwise
+    forest = booster.packed_forest()
+    per_node = 4 * 4 + 2 * 1  # four f32/int32 planes + two bool flag planes
+    assert forest.nbytes == forest.n_trees * forest.n_total * per_node
+
+
+def test_serve_stats_empty_quantiles():
+    stats = ServeStats()
+    assert stats.p50_ms == 0.0 and stats.p99_ms == 0.0
+
+
+def test_memory_model_training_terms():
+    model = DeviceMemoryModel(num_features=10, max_depth=3, page_bytes=1000)
+    assert model.ellpack_bytes(50) == 50 * 10
+    fixed = model.fixed_bytes
+    assert model.in_core_bytes(50) == fixed + 500 + 50 * (model.row_state_bytes + 8)
+    assert model.out_of_core_bytes(50) == fixed + 2000 + 50 * model.row_state_bytes
+    # sampling at f keeps only the compacted page resident
+    assert model.sampled_bytes(50, 0.5) == (
+        fixed + 2000 + model.ellpack_bytes(25) + 25 * model.row_state_bytes
+    )
+    assert model.sampled_bytes(50, 1.0) >= model.out_of_core_bytes(50)
