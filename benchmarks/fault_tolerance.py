@@ -1,0 +1,134 @@
+"""Fault-tolerance overhead benchmark.
+
+Three costs the robustness layer must keep honest:
+
+  fault_fire_overhead    cost of an *unarmed* `fault_inject.fire()` call —
+                         the "off by default, zero overhead" contract. The
+                         derived field compares against an armed (non
+                         -matching) injector.
+  checkpoint_save        atomic `GradientBooster.save` (temp dir + CRC32
+                         manifest + fsync + rename) per call.
+  elastic_vs_single      wall time of a 2-worker `ElasticTrainer` fit vs
+                         the same forest trained single-process out-of-core
+                         (per-iteration checkpointing included) — the price
+                         of elasticity, plus one kill-and-recover run
+                         (recovery wall time in the derived field).
+
+Rows: ``name,us_per_call,derived``.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+from benchmarks.common import csv_row, save_result
+
+
+def _time_fire(n: int) -> float:
+    from repro.fault import inject as fault_inject
+
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fault_inject.fire("bench.site")
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def main(quick: bool = False):
+    import numpy as np
+
+    from repro.core import BoosterParams, ExecutionPolicy, GradientBooster
+    from repro.data.dmatrix import IterDMatrix
+    from repro.data.synthetic import make_classification
+    from repro.distributed import ElasticConfig, ElasticTrainer, prepare_shards
+    from repro.fault import FaultPlan, FaultSpec, injected
+
+    n_fire = 200_000 if quick else 2_000_000
+    unarmed_us = _time_fire(n_fire)
+    with injected(FaultPlan.of(FaultSpec(site="other.site"))):
+        armed_us = _time_fire(n_fire)
+    yield csv_row(
+        "fault_fire_overhead",
+        unarmed_us,
+        f"armed_nonmatching={armed_us:.4f}us unarmed={unarmed_us:.4f}us",
+    )
+
+    n_rows, n_trees = (1200, 4) if quick else (6000, 10)
+    X, y = make_classification(n_rows, 8, class_sep=1.5, flip_y=0.02, seed=11)
+    params = BoosterParams(
+        n_estimators=n_trees, max_depth=3, max_bin=32,
+        objective="binary:logistic", seed=0,
+    )
+
+    with tempfile.TemporaryDirectory() as td:
+        dm = IterDMatrix(
+            [(X, y)], max_bin=32,
+            cache_dir=os.path.join(td, "cache"), page_bytes=8 * 1024,
+        )
+        single = GradientBooster(params, policy=ExecutionPolicy(mode="out_of_core"))
+        t0 = time.perf_counter()
+        single.fit(dm)
+        single_s = time.perf_counter() - t0
+
+        n_saves = 5 if quick else 20
+        ckpt = os.path.join(td, "ckpt_bench")
+        t0 = time.perf_counter()
+        for _ in range(n_saves):
+            single.save(ckpt)
+        save_us = (time.perf_counter() - t0) / n_saves * 1e6
+        yield csv_row(
+            "checkpoint_save", save_us,
+            f"trees={n_trees} atomic+crc32+fsync n_saves={n_saves}",
+        )
+
+        cfg = ElasticConfig(n_workers=2, rpc_timeout_s=300.0)
+        shards = prepare_shards(
+            X, y, cfg.n_workers, os.path.join(td, "shards"),
+            max_bin=32, page_bytes=8 * 1024,
+        )
+        t0 = time.perf_counter()
+        elastic = ElasticTrainer(
+            shards, params, checkpoint_dir=os.path.join(td, "ckpt_e"), config=cfg
+        ).fit()
+        elastic_s = time.perf_counter() - t0
+        assert len(elastic.trees) == n_trees
+
+        plan = FaultPlan.of(
+            FaultSpec(site="elastic.worker.iteration", at=max(2, n_trees // 2),
+                      action="kill", match={"worker": "w1"})
+        )
+        tr = ElasticTrainer(
+            shards, params, checkpoint_dir=os.path.join(td, "ckpt_c"),
+            config=cfg, fault_plan=plan,
+        )
+        t0 = time.perf_counter()
+        chaotic = tr.fit()
+        chaos_s = time.perf_counter() - t0
+        for a, b in zip(elastic.trees, chaotic.trees):
+            for f in a._fields:
+                assert np.array_equal(np.asarray(getattr(a, f)), np.asarray(getattr(b, f)))
+
+        derived = (
+            f"single={single_s:.2f}s elastic={elastic_s:.2f}s "
+            f"ratio={elastic_s / single_s:.2f}x "
+            f"kill_and_recover={chaos_s:.2f}s recoveries={tr.recoveries} "
+            "recovered_forest=bit_for_bit"
+        )
+        yield csv_row("elastic_vs_single", elastic_s * 1e6 / n_trees, derived)
+        save_result(
+            "fault_tolerance",
+            {
+                "fire_unarmed_us": unarmed_us,
+                "fire_armed_us": armed_us,
+                "checkpoint_save_us": save_us,
+                "single_s": single_s,
+                "elastic_s": elastic_s,
+                "kill_and_recover_s": chaos_s,
+                "quick": quick,
+            },
+        )
+
+
+if __name__ == "__main__":
+    for row in main(quick=True):
+        print(row)

@@ -38,8 +38,9 @@ def main() -> None:
                          "(checked-in baselines: BENCH_<suite>.json)")
     args = ap.parse_args()
 
-    from benchmarks import kernel_bench, max_data_size, sampling_methods
-    from benchmarks import serving_latency, training_curves, training_time
+    from benchmarks import fault_tolerance, kernel_bench, max_data_size
+    from benchmarks import sampling_methods, serving_latency, training_curves
+    from benchmarks import training_time
 
     table = {
         "table1_max_data_size": max_data_size.main,
@@ -48,6 +49,7 @@ def main() -> None:
         "sampling_methods": sampling_methods.main,
         "kernel_bench": kernel_bench.main,
         "serving_latency": serving_latency.main,
+        "fault_tolerance": fault_tolerance.main,
     }
     only = set(args.only.split(",")) if args.only else None
 

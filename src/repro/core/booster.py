@@ -18,7 +18,9 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import shutil
 import time
+import zlib
 
 import jax
 import jax.numpy as jnp
@@ -38,9 +40,32 @@ from repro.core.tree import (
     predict_tree_bins,
     stack_trees,
 )
-from repro.data.pages import TransferStats
+from repro.data.pages import TransferStats, fsync_dir
 
 Array = jax.Array
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint failed its manifest validation — never load garbage.
+
+    Names the damaged file and, when one survives, the last-good checkpoint
+    (``<path>.prev``, kept by the atomic `GradientBooster.save` rename) so
+    the operator can resume from it: ``GradientBooster.resume(err.last_good,
+    data)``.
+    """
+
+    def __init__(self, path: str, bad_file: str, reason: str, last_good: str | None):
+        self.path = path
+        self.bad_file = bad_file
+        self.last_good = last_good
+        hint = (
+            f"last-good checkpoint: {last_good!r} — resume from it"
+            if last_good
+            else "no intact previous checkpoint found"
+        )
+        super().__init__(
+            f"checkpoint {path!r} is corrupt: {bad_file} {reason}. {hint}."
+        )
 
 
 @dataclasses.dataclass
@@ -180,6 +205,7 @@ class GradientBooster:
             budget_bytes=self.policy.hist_budget_bytes,
             retained_levels=self.policy.hist_retained_levels,
             transfer_stats=transfer_stats,
+            retry=self.policy.retry,
         )
 
     # ---------------------------------------------------------- sklearn compat
@@ -372,6 +398,7 @@ class GradientBooster:
             staging_depth=staging_depth or self.policy.staging_depth,
             cache=self._device_cache,
             indices=indices,
+            retry=self.policy.retry,
         )
 
     def _fit_external(
@@ -598,30 +625,128 @@ class GradientBooster:
 
     # ----------------------------------------------------------- checkpoint
     def save(self, path: str) -> None:
-        """Checkpoint the forest + quantization state (restartable training)."""
-        os.makedirs(path, exist_ok=True)
+        """Checkpoint the forest + quantization state — atomically, durably.
+
+        Files are written to a temp sibling directory, fsynced, and renamed
+        into place; the previous checkpoint survives one generation as
+        ``<path>.prev`` (the last-good fallback `CheckpointCorruptError`
+        names). A ``manifest.json`` records each file's CRC32, validated by
+        ``load`` — a crash at any point leaves either the old checkpoint or
+        the new one, never a torn mix the next resume would trust.
+        """
+        assert self.cuts is not None
         forest = stack_trees(self.trees) if self.trees else None
         arrays = {}
         if forest is not None:
             arrays = {f: np.asarray(getattr(forest, f)) for f in forest._fields}
-        assert self.cuts is not None
-        np.savez_compressed(
-            os.path.join(path, "model.npz"),
-            cut_values=self.cuts.values,
-            cut_ptrs=self.cuts.ptrs,
-            cut_min_vals=self.cuts.min_vals,
-            rng=np.asarray(self._rng),
-            **{f"tree_{k}": v for k, v in arrays.items()},
-        )
         meta = dataclasses.asdict(self.params)
         meta["sampling"] = dataclasses.asdict(self.params.sampling)
         meta["base_margin_"] = self.base_margin_
         meta["n_trees"] = len(self.trees)
-        with open(os.path.join(path, "booster.json"), "w") as fh:
-            json.dump(meta, fh, indent=2)
+
+        parent = os.path.dirname(os.path.abspath(path)) or "."
+        os.makedirs(parent, exist_ok=True)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        try:
+            np.savez_compressed(
+                os.path.join(tmp, "model.npz"),
+                cut_values=self.cuts.values,
+                cut_ptrs=self.cuts.ptrs,
+                cut_min_vals=self.cuts.min_vals,
+                rng=np.asarray(self._rng),
+                **{f"tree_{k}": v for k, v in arrays.items()},
+            )
+            with open(os.path.join(tmp, "booster.json"), "w") as fh:
+                json.dump(meta, fh, indent=2)
+            manifest = {"format": 1, "files": {}}
+            for name in ("model.npz", "booster.json"):
+                with open(os.path.join(tmp, name), "rb") as fh:
+                    blob = fh.read()
+                manifest["files"][name] = {"crc32": zlib.crc32(blob), "bytes": len(blob)}
+            with open(os.path.join(tmp, "manifest.json"), "w") as fh:
+                json.dump(manifest, fh, indent=2)
+            for name in ("model.npz", "booster.json", "manifest.json"):
+                with open(os.path.join(tmp, name), "rb") as fh:
+                    os.fsync(fh.fileno())
+            fsync_dir(tmp)
+            prev = f"{path}.prev"
+            rotated = False
+            if os.path.isdir(path):
+                # keep exactly one last-good generation
+                shutil.rmtree(prev, ignore_errors=True)
+                os.replace(path, prev)
+                rotated = True
+            try:
+                os.replace(tmp, path)
+            except BaseException:
+                if rotated:
+                    # publish failed after rotation: put the live copy back so
+                    # a crashed save never leaves `path` empty
+                    os.replace(prev, path)
+                raise
+            fsync_dir(parent)
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+
+    @staticmethod
+    def _checkpoint_damage(path: str) -> tuple[str, str] | None:
+        """(bad_file, reason) if the checkpoint fails validation, else None.
+
+        Pre-durability checkpoints without a ``manifest.json`` validate on
+        file presence only (nothing to checksum against); missing files are
+        damage either way.
+        """
+        manifest_path = os.path.join(path, "manifest.json")
+        if not os.path.isdir(path):
+            return (path, "does not exist")
+        files: dict[str, dict] = {}
+        if os.path.exists(manifest_path):
+            try:
+                with open(manifest_path) as fh:
+                    files = json.load(fh)["files"]
+            except (OSError, ValueError, KeyError) as err:
+                return ("manifest.json", f"is unreadable ({err})")
+        for name in ("booster.json", "model.npz"):
+            fp = os.path.join(path, name)
+            if not os.path.exists(fp):
+                return (name, "is missing")
+            want = files.get(name, {}).get("crc32")
+            if want is None:
+                continue
+            with open(fp, "rb") as fh:
+                got = zlib.crc32(fh.read())
+            if got != want:
+                return (
+                    name,
+                    f"failed its CRC32 check (manifest {want:#010x}, on disk {got:#010x})",
+                )
+        return None
+
+    @classmethod
+    def verify_checkpoint(cls, path: str) -> None:
+        """Validate a checkpoint's manifest; raise `CheckpointCorruptError`
+        (naming the bad file and the last-good fallback) on damage."""
+        damage = cls._checkpoint_damage(path)
+        if damage is None:
+            return
+        prev = f"{path}.prev"
+        last_good = prev if cls._checkpoint_damage(prev) is None else None
+        raise CheckpointCorruptError(path, damage[0], damage[1], last_good)
+
+    @classmethod
+    def last_good_checkpoint(cls, path: str) -> str | None:
+        """The newest intact checkpoint among ``path`` and ``path.prev``."""
+        for cand in (path, f"{path}.prev"):
+            if cls._checkpoint_damage(cand) is None:
+                return cand
+        return None
 
     @classmethod
     def load(cls, path: str) -> "GradientBooster":
+        cls.verify_checkpoint(path)
         with open(os.path.join(path, "booster.json")) as fh:
             meta = json.load(fh)
         base_margin = meta.pop("base_margin_")

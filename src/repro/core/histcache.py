@@ -109,6 +109,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.pages import TransferStats
+from repro.fault import inject as fault_inject
+from repro.fault.retry import RetryPolicy
 
 Array = jax.Array
 
@@ -251,6 +253,7 @@ class HistogramStore:
         budget_bytes: int | None = None,
         retained_levels: int = 1,
         transfer_stats: TransferStats | None = None,
+        retry: "RetryPolicy | None" = None,
     ):
         if budget_bytes is not None and budget_bytes < 0:
             raise ValueError(f"budget_bytes must be >= 0 or None, got {budget_bytes}")
@@ -260,6 +263,7 @@ class HistogramStore:
         self.budget_bytes = budget_bytes
         self.retained_levels = retained_levels
         self.transfer_stats = transfer_stats if transfer_stats is not None else TransferStats()
+        self.retry = retry if retry is not None else RetryPolicy()
         self.stats = HistCacheStats()
         self._device: dict[tuple, Array] = {}
         self._host: dict[tuple, np.ndarray] = {}
@@ -335,22 +339,34 @@ class HistogramStore:
         histogram put has nothing to overlap, and booking its wall==stage
         seconds into the page pipeline's shared ledger would dilute
         ``overlap_ratio`` — while the byte counters land in the shared
-        `TransferStats` next to the page traffic."""
+        `TransferStats` next to the page traffic. The staging put is retried
+        under ``self.retry`` (a transient device-transfer fault should not
+        kill a build whose host copy is intact); the fault-injection site
+        "hist_store.fetch" fires once per fetch."""
         from repro.pipeline.stream import PageStream
 
-        host = self._host.pop(key)
-        stream = PageStream(
-            lambda _i: host, [0], threaded=False,
-            cache_tag="hist", stats=TransferStats(),
+        host = self._host[key]  # pop only after a successful stage
+
+        def _stage() -> Array:
+            fault_inject.fire("hist_store.fetch")
+            stream = PageStream(
+                lambda _i: host, [0], threaded=False,
+                cache_tag="hist", stats=TransferStats(),
+            )
+            (page,) = list(stream)
+            return page.device
+
+        device = self.retry.call(
+            _stage, stats=self.transfer_stats, describe="histogram fetch"
         )
-        (page,) = list(stream)
-        self._device[key] = page.device
+        del self._host[key]
+        self._device[key] = device
         self._dev_bytes += self._nbytes[key]
         ts = self.transfer_stats
         ts.hist_fetches += 1
         ts.hist_fetch_bytes += host.nbytes
         ts.host_to_device_bytes += host.nbytes
-        return page.device
+        return device
 
     def _coldest(self, keys: list[tuple]) -> tuple:
         return min(keys, key=lambda k: (self._priority[k], self._stamp[k]))

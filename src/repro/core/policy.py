@@ -32,6 +32,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.core.memory import DeviceMemoryModel
+from repro.fault.retry import RetryPolicy
 
 MODES = ("auto", "in_core", "out_of_core", "sampled")
 
@@ -93,6 +94,10 @@ class ExecutionPolicy:
     # checkpoint cadence for external-mode training (None = no checkpoints)
     checkpoint_every: int | None = None
     checkpoint_dir: str | None = None
+    # transient-I/O retry/backoff shared by the page prefetcher and the
+    # histogram-store fetch path (repro.fault.RetryPolicy); attempts/aborts
+    # are accounted in TransferStats.io_retries / io_giveups
+    retry: RetryPolicy = RetryPolicy()
 
     def __post_init__(self) -> None:
         if self.mode not in MODES:

@@ -89,12 +89,15 @@ class PageSet:
         cache: DevicePageCache | None = None,
         put=None,
         indices: Iterable[int] | None = None,
+        retry=None,
     ) -> PageStream:
         """One pass of the unified pipeline engine over this page set.
 
         ``indices`` restricts the pass to a subset of pages (stream indices
         keep their global page numbering, so per-page state keyed by index
         stays valid) — the per-node page-skipping path of lossguide builds.
+        ``retry`` is the prefetcher's `repro.fault.RetryPolicy` (None = its
+        defaults).
         """
         common = dict(
             to_array=_bins_to_host_array,
@@ -103,6 +106,7 @@ class PageSet:
             prefetch_depth=prefetch_depth,
             staging_depth=staging_depth,
             cache=cache,
+            retry=retry,
         )
         if self.host_pages is not None:
             return PageStream.from_host_pages(self.host_pages, indices=indices, **common)

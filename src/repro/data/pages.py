@@ -6,6 +6,17 @@ optional zstd compression; `Prefetcher` is the "multi-threaded pre-fetcher" of
 host I/O overlaps device compute. `TransferStats` counts the bytes that cross
 each boundary (disk->host, host->device), which is the measured quantity behind
 the paper's PCIe-bottleneck argument and our roofline paging model.
+
+Durability: every page blob lands via tmp-file + fsync + ``os.replace`` and is
+CRC32-checksummed in the manifest (itself replaced atomically), so a crash
+mid-write never leaves a half-written page that a later `PagedDMatrix` reopen
+would trust — the torn page is simply absent from the manifest. `read_page`
+verifies the stored CRC and raises `PageCorruptError` naming the page index
+instead of decoding garbage. Transient read faults are retried with
+exponential backoff through `repro.fault.RetryPolicy` (attempts/aborts in
+``TransferStats.io_retries`` / ``io_giveups``), and both store and prefetcher
+fire `repro.fault.inject` sites so chaos tests can plant deterministic I/O
+failures.
 """
 from __future__ import annotations
 
@@ -16,9 +27,13 @@ import os
 import queue
 import threading
 import time
+import zlib
 from typing import Callable, Iterable, Iterator
 
 import numpy as np
+
+from repro.fault import inject as fault_inject
+from repro.fault.retry import RetryPolicy
 
 try:
     import zstandard as _zstd
@@ -57,6 +72,12 @@ class TransferStats:
     hist_fetch_bytes: int = 0
     hist_spills: int = 0
     hist_fetches: int = 0
+    # --- retry ledger (filled by repro.fault.RetryPolicy.call) ---
+    # io_retries counts re-attempts that a transient fault cost us (page
+    # reads, histogram staging, elastic RPCs); io_giveups counts operations
+    # that exhausted their attempt budget and surfaced the error
+    io_retries: int = 0
+    io_giveups: int = 0
 
     @property
     def stream_serial_seconds(self) -> float:
@@ -91,6 +112,8 @@ class TransferStats:
         self.hist_fetch_bytes = 0
         self.hist_spills = 0
         self.hist_fetches = 0
+        self.io_retries = 0
+        self.io_giveups = 0
 
 
 GLOBAL_STATS = TransferStats()
@@ -115,8 +138,59 @@ def _decode(blob: bytes) -> dict[str, np.ndarray]:
     return {k: data[k] for k in data.files}
 
 
+class PageCorruptError(OSError):
+    """A page blob failed its manifest CRC32 check (torn write / bit rot).
+
+    Raised by `PageStore.read_page` instead of decoding garbage; names the
+    page index and file so the operator knows exactly what to rebuild.
+    """
+
+    def __init__(self, idx: int, path: str, expected: int, actual: int):
+        self.idx = idx
+        self.path = path
+        super().__init__(
+            f"page {idx} is corrupt: CRC32 mismatch on {path} "
+            f"(manifest {expected:#010x}, on disk {actual:#010x}). The page "
+            f"cache is damaged — rebuild it from the raw source (IterDMatrix)."
+        )
+
+
+def _atomic_write(path: str, data: bytes) -> None:
+    """Write bytes durably: tmp file in the same dir, fsync, `os.replace`.
+
+    A crash at any point leaves either the old file or the new file — never a
+    half-written one trusted by a later reopen.
+    """
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "wb") as fh:
+        fh.write(data)
+        fh.flush()
+        os.fsync(fh.fileno())
+    os.replace(tmp, path)
+
+
+def fsync_dir(path: str) -> None:
+    """Best-effort directory fsync so a rename itself survives power loss."""
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:  # pragma: no cover - platform without dir-open support
+        return
+    try:
+        os.fsync(fd)
+    except OSError:  # pragma: no cover
+        pass
+    finally:
+        os.close(fd)
+
+
 class PageStore:
-    """Directory of numbered pages; thread-safe reads."""
+    """Directory of numbered pages; thread-safe reads, durable writes.
+
+    Every blob and the manifest land via `_atomic_write`; each manifest entry
+    records the blob's CRC32, verified on `read_page`. A crash between blob
+    and manifest writes leaves the new page invisible (the manifest still
+    describes a fully consistent store).
+    """
 
     def __init__(self, root: str, compress: bool = False, stats: TransferStats | None = None):
         self.root = root
@@ -138,21 +212,30 @@ class PageStore:
 
     def write_page(self, arrays: dict[str, np.ndarray], meta: dict | None = None) -> int:
         idx = self.n_pages
+        fault_inject.fire("page_store.write_page", index=idx)
         blob = _encode(arrays, self.compress)
-        with open(self._path(idx), "wb") as fh:
-            fh.write(blob)
+        _atomic_write(self._path(idx), blob)
         self.stats.disk_write_bytes += len(blob)
-        entry = {"idx": idx, "bytes": len(blob)}
+        entry = {"idx": idx, "bytes": len(blob), "crc32": zlib.crc32(blob)}
         entry.update(meta or {})
         self._meta["pages"].append(entry)
-        with open(self._meta_path, "w") as fh:
-            json.dump(self._meta, fh)
+        # manifest last: a crash before this point leaves the fresh blob
+        # unreferenced, never a referenced-but-torn page
+        _atomic_write(self._meta_path, json.dumps(self._meta).encode())
+        fsync_dir(self.root)
         return idx
 
     def read_page(self, idx: int) -> dict[str, np.ndarray]:
+        fault_inject.fire("page_store.read_page", index=idx)
         t0 = time.perf_counter()
         with open(self._path(idx), "rb") as fh:
             blob = fh.read()
+        entry = self._meta["pages"][idx] if idx < len(self._meta["pages"]) else {}
+        want = entry.get("crc32")  # pre-durability manifests have no CRC
+        if want is not None:
+            got = zlib.crc32(blob)
+            if got != want:
+                raise PageCorruptError(idx, self._path(idx), want, got)
         out = _decode(blob)
         self.stats.disk_read_bytes += len(blob)
         self.stats.page_loads += 1
@@ -168,7 +251,13 @@ class Prefetcher:
 
     Wraps any `load(idx)` callable; yields pages in order while keeping up to
     `depth` loads in flight ahead of the consumer. Failed loads are retried
-    (`retries`) before surfacing — transient-I/O fault tolerance for long runs.
+    with exponential backoff + jitter under a `repro.fault.RetryPolicy`
+    (``retry``; the legacy ``retries`` count maps to
+    ``RetryPolicy(max_attempts=retries + 1)``) before surfacing — transient-
+    I/O fault tolerance for long runs. Re-attempts land in
+    ``stats.io_retries``, exhausted budgets in ``stats.io_giveups``.
+    `PageCorruptError` is never retried: a failed checksum is deterministic
+    damage, not a transient fault.
     """
 
     def __init__(
@@ -177,25 +266,33 @@ class Prefetcher:
         indices: Iterable[int],
         depth: int = 2,
         retries: int = 2,
+        retry: RetryPolicy | None = None,
+        stats: TransferStats | None = None,
     ):
         self._load = load
         self._indices = list(indices)
         self._queue: "queue.Queue[tuple[int, object]]" = queue.Queue(maxsize=depth)
-        self._retries = retries
+        self._retry = retry if retry is not None else RetryPolicy(max_attempts=retries + 1)
+        self._stats = stats
         self._thread = threading.Thread(target=self._worker, daemon=True)
         self._thread.start()
 
     def _worker(self) -> None:
         for idx in self._indices:
-            err: Exception | None = None
-            for _ in range(self._retries + 1):
-                try:
-                    page = self._load(idx)
-                    err = None
-                    break
-                except Exception as e:  # pragma: no cover - exercised via fault test
-                    err = e
-            self._queue.put((idx, err if err is not None else page))
+            try:
+                page = self._retry.call(
+                    lambda idx=idx: self._load(idx),
+                    # the old contract retried any exception; keep it, minus
+                    # deterministic corruption
+                    retryable=(Exception,),
+                    nonretryable=(PageCorruptError,),
+                    stats=self._stats,
+                    describe=f"page {idx} load",
+                )
+            except Exception as e:
+                self._queue.put((idx, e))
+                continue
+            self._queue.put((idx, page))
         self._queue.put((-1, None))
 
     def __iter__(self) -> Iterator[tuple[int, dict]]:
@@ -203,6 +300,8 @@ class Prefetcher:
             idx, item = self._queue.get()
             if idx == -1:
                 return
+            if isinstance(item, PageCorruptError):
+                raise item  # already the actionable error; don't bury it
             if isinstance(item, Exception):
                 raise RuntimeError(f"page {idx} failed to load after retries") from item
             yield idx, item

@@ -1,3 +1,10 @@
+from repro.distributed.elastic import (
+    ElasticConfig,
+    ElasticError,
+    ElasticTrainer,
+    WorkerFailure,
+    prepare_shards,
+)
 from repro.distributed.gbdt_shard import (
     DistConfig,
     check_feature_parallel_lossguide,
@@ -11,11 +18,16 @@ from repro.distributed.gbdt_shard import (
 
 __all__ = [
     "DistConfig",
+    "ElasticConfig",
+    "ElasticError",
+    "ElasticTrainer",
+    "WorkerFailure",
     "check_feature_parallel_lossguide",
     "distributed_train_step",
     "fit_sharded",
     "grow_tree_distributed",
     "grow_tree_distributed_paged",
     "make_gbdt_step_fn",
+    "prepare_shards",
     "sharded_page_put",
 ]

@@ -1,0 +1,35 @@
+"""repro.fault: deterministic fault injection + shared retry/backoff policy.
+
+Two halves of one robustness story: `inject` plants reproducible faults at
+the stack's I/O sites (chaos tests), `retry` is the policy that absorbs the
+transient ones (production hardening). The chaos tests close the loop by
+injecting faults and asserting the retry/recovery machinery converges to the
+fault-free result.
+"""
+from repro.fault.inject import (
+    ENV_VAR,
+    FaultInjector,
+    FaultPlan,
+    FaultSpec,
+    fire,
+    get_injector,
+    injected,
+    install,
+    install_from_env,
+    uninstall,
+)
+from repro.fault.retry import RetryPolicy
+
+__all__ = [
+    "ENV_VAR",
+    "FaultInjector",
+    "FaultPlan",
+    "FaultSpec",
+    "RetryPolicy",
+    "fire",
+    "get_injector",
+    "injected",
+    "install",
+    "install_from_env",
+    "uninstall",
+]

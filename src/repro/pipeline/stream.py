@@ -37,6 +37,7 @@ import jax
 import numpy as np
 
 from repro.data.pages import GLOBAL_STATS, PageStore, Prefetcher, TransferStats
+from repro.fault.retry import RetryPolicy
 from repro.pipeline.cache import DevicePageCache
 
 
@@ -72,6 +73,9 @@ class PageStream:
     cache_tag : namespace for cache keys so distinct streams over the same
         indices don't collide.
     stats : `TransferStats` sink (defaults to the module-global one).
+    retry : `RetryPolicy` for the threaded prefetcher's transient-fault
+        retries (None = the policy's defaults); attempts/aborts land in
+        ``stats.io_retries`` / ``io_giveups``.
 
     A `PageStream` is re-iterable: each ``iter()`` is an independent pass.
     """
@@ -89,6 +93,7 @@ class PageStream:
         cache: DevicePageCache | None = None,
         cache_tag: str = "page",
         stats: TransferStats | None = None,
+        retry: RetryPolicy | None = None,
     ):
         self._fetch = fetch
         self._indices = list(indices)
@@ -100,6 +105,7 @@ class PageStream:
         self.cache = cache
         self.cache_tag = cache_tag
         self.stats = stats or GLOBAL_STATS
+        self.retry = retry
 
     # ------------------------------------------------------------ constructors
     @classmethod
@@ -141,7 +147,13 @@ class PageStream:
         """Raw fetched pages, no ledger entries beyond fetch time itself."""
         timed = self._timed_fetch
         if self._threaded:
-            yield from Prefetcher(timed, self._indices, depth=self.prefetch_depth)
+            yield from Prefetcher(
+                timed,
+                self._indices,
+                depth=self.prefetch_depth,
+                retry=self.retry,
+                stats=self.stats,
+            )
         else:
             for idx in self._indices:
                 yield idx, timed(idx)

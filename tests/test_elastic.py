@@ -1,0 +1,215 @@
+"""ElasticTrainer chaos tests: multi-process workers, injected crashes,
+checkpoint-driven recovery. Everything here spawns real subprocesses, so the
+heavyweight scenarios carry @pytest.mark.slow (nightly); one fast smoke stays
+in tier-1 to keep the wire protocol honest.
+
+The equality bar is deliberately two-tiered:
+  * elastic vs elastic (chaos vs uninterrupted) must be BIT-FOR-BIT — the
+    coordinator accumulates per-shard sums/histograms/counts in sorted shard
+    order, so totals are independent of which worker owns which shard, and a
+    recovered run must reproduce the uninterrupted one exactly;
+  * elastic vs single-process uses the shared structural oracle (f32
+    accumulation order differs between the paged single-stream build and the
+    per-shard distributed build).
+"""
+import os
+
+import numpy as np
+import pytest
+from oracle import assert_forests_equal
+
+from repro.core import BoosterParams, ExecutionPolicy, GradientBooster
+from repro.data.dmatrix import IterDMatrix
+from repro.data.synthetic import make_classification
+from repro.distributed import ElasticConfig, ElasticError, ElasticTrainer, prepare_shards
+from repro.fault import FaultPlan, FaultSpec
+
+PARAMS = dict(n_estimators=4, max_depth=3, max_bin=32, objective="binary:logistic")
+CFG = ElasticConfig(n_workers=2, rpc_timeout_s=180.0, heartbeat_timeout_s=120.0)
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    return make_classification(600, 8, class_sep=1.5, flip_y=0.02, seed=11)
+
+
+@pytest.fixture(scope="module")
+def shards(dataset, tmp_path_factory):
+    X, y = dataset
+    root = tmp_path_factory.mktemp("elastic") / "shards"
+    return prepare_shards(X, y, 2, str(root), max_bin=32, page_bytes=4096)
+
+
+def _assert_forests_identical(got, want):
+    assert len(got) == len(want)
+    for i, (g, w) in enumerate(zip(got, want)):
+        for field in w._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(g, field)),
+                np.asarray(getattr(w, field)),
+                err_msg=f"tree {i} field {field} differs",
+            )
+
+
+def test_elastic_smoke_two_workers(shards, tmp_path):
+    """Fast tier-1 smoke: the RPC protocol trains a small forest end to end."""
+    params = BoosterParams(seed=0, **dict(PARAMS, n_estimators=2))
+    tr = ElasticTrainer(shards, params, checkpoint_dir=str(tmp_path / "ckpt"), config=CFG)
+    booster = tr.fit()
+    assert len(booster.trees) == 2
+    assert tr.recoveries == 0
+    # every iteration checkpoints; the final one is intact and loads
+    GradientBooster.verify_checkpoint(str(tmp_path / "ckpt"))
+    loaded = GradientBooster.load(str(tmp_path / "ckpt"))
+    _assert_forests_identical(loaded.trees, booster.trees)
+
+
+@pytest.mark.slow
+def test_elastic_matches_single_process(shards, dataset, tmp_path):
+    X, y = dataset
+    params = BoosterParams(seed=0, **PARAMS)
+    elastic = ElasticTrainer(
+        shards, params, checkpoint_dir=str(tmp_path / "ckpt"), config=CFG
+    ).fit()
+
+    single = GradientBooster(params, policy=ExecutionPolicy(mode="out_of_core"))
+    single.fit(IterDMatrix([(X, y)], max_bin=32, page_bytes=4096))
+    assert_forests_equal(elastic.trees, single.trees)
+
+
+@pytest.mark.slow
+def test_chaos_worker_kill_recovers_bit_for_bit(shards, tmp_path):
+    """ISSUE acceptance: kill a worker mid-fit; the coordinator detects the
+    death, re-assigns its shard, resumes from the last durable checkpoint,
+    and the recovered forest equals the uninterrupted run exactly."""
+    params = BoosterParams(seed=0, **PARAMS)
+    smooth = ElasticTrainer(
+        shards, params, checkpoint_dir=str(tmp_path / "ckpt_a"), config=CFG
+    ).fit()
+
+    plan = FaultPlan.of(
+        FaultSpec(
+            site="elastic.worker.iteration", at=3, action="kill", match={"worker": "w1"}
+        )
+    )
+    tr = ElasticTrainer(
+        shards,
+        params,
+        checkpoint_dir=str(tmp_path / "ckpt_b"),
+        config=CFG,
+        fault_plan=plan,
+    )
+    chaotic = tr.fit()
+
+    assert tr.recoveries == 1
+    assert any("re-assigning shard" in e for e in tr.events)
+    assert any("resumed" in e for e in tr.events)
+    assert len(chaotic.trees) == PARAMS["n_estimators"]
+    _assert_forests_identical(chaotic.trees, smooth.trees)
+    # the structural oracle agrees at its strictest setting too
+    assert_forests_equal(chaotic.trees, smooth.trees, exact=True, leaf_rtol=0, leaf_atol=0)
+
+
+@pytest.mark.slow
+def test_chaos_kill_with_respawn(shards, tmp_path):
+    """With respawn enabled the pool returns to full strength and the forest
+    still matches the uninterrupted run bit-for-bit."""
+    params = BoosterParams(seed=0, **PARAMS)
+    smooth = ElasticTrainer(
+        shards, params, checkpoint_dir=str(tmp_path / "ckpt_a"), config=CFG
+    ).fit()
+
+    plan = FaultPlan.of(
+        FaultSpec(
+            site="elastic.worker.iteration", at=2, action="kill", match={"worker": "w0"}
+        )
+    )
+    cfg = ElasticConfig(
+        n_workers=2, rpc_timeout_s=180.0, heartbeat_timeout_s=120.0, respawn=True
+    )
+    tr = ElasticTrainer(
+        shards,
+        params,
+        checkpoint_dir=str(tmp_path / "ckpt_b"),
+        config=cfg,
+        fault_plan=plan,
+    )
+    chaotic = tr.fit()
+    assert tr.recoveries == 1
+    # initial pool of 2 plus one replacement
+    assert sum("spawned" in e for e in tr.events) == 3
+    _assert_forests_identical(chaotic.trees, smooth.trees)
+
+
+@pytest.mark.slow
+def test_chaos_transient_rpc_fault_is_retried(shards, tmp_path):
+    """A worker-side OSError during one hist RPC is transient: the
+    coordinator's RetryPolicy re-issues the idempotent op and training
+    completes with no recovery."""
+    params = BoosterParams(seed=0, **PARAMS)
+    plan = FaultPlan.of(
+        FaultSpec(site="elastic.rpc", at=6, exc="OSError", match={"op": "hist"})
+    )
+    tr = ElasticTrainer(
+        shards,
+        params,
+        checkpoint_dir=str(tmp_path / "ckpt"),
+        config=CFG,
+        fault_plan=plan,
+    )
+    booster = tr.fit()
+    assert tr.recoveries == 0
+    assert tr.stats.io_retries >= 1
+    assert len(booster.trees) == PARAMS["n_estimators"]
+
+
+@pytest.mark.slow
+def test_chaos_repeated_kills_exhaust_recovery_budget(shards, tmp_path):
+    """Killing workers more times than max_recoveries aborts with a clear
+    ElasticError instead of looping forever."""
+    params = BoosterParams(seed=0, **PARAMS)
+    plan = FaultPlan.of(
+        FaultSpec(site="elastic.worker.iteration", at=1, count=-1, action="kill")
+    )
+    cfg = ElasticConfig(
+        n_workers=2,
+        rpc_timeout_s=180.0,
+        heartbeat_timeout_s=120.0,
+        max_recoveries=1,
+        respawn=True,
+    )
+    tr = ElasticTrainer(
+        shards,
+        params,
+        checkpoint_dir=str(tmp_path / "ckpt"),
+        config=cfg,
+        fault_plan=plan,
+    )
+    with pytest.raises(ElasticError, match="giving up"):
+        tr.fit()
+    # _shutdown ran: no orphaned worker processes linger
+    assert tr._workers == []
+
+
+def test_elastic_rejects_sampling(shards, tmp_path):
+    from repro.core import SamplingConfig
+
+    params = BoosterParams(
+        seed=0, sampling=SamplingConfig(method="mvs", f=0.5), **PARAMS
+    )
+    with pytest.raises(NotImplementedError):
+        ElasticTrainer(shards, params, checkpoint_dir=str(tmp_path / "ckpt"))
+
+
+def test_prepare_shards_layout(dataset, tmp_path):
+    X, y = dataset
+    dirs = prepare_shards(X, y, 3, str(tmp_path / "sh"), max_bin=32, page_bytes=4096)
+    assert len(dirs) == 3
+    rows = 0
+    for d in dirs:
+        assert os.path.isfile(os.path.join(d, "manifest.json"))
+        from repro.data.dmatrix import PagedDMatrix
+
+        dm = PagedDMatrix(d)
+        rows += dm.n_rows
+    assert rows == X.shape[0]
