@@ -24,7 +24,7 @@ def _bench(fn, *args, iters=10) -> float:
     warmup call. The min is the standard robust estimator for shared-host
     microbenchmarks — a mean over few iterations is dominated by scheduler
     noise and GC pauses, not the kernel."""
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))
     best = float("inf")
     for _ in range(iters):
         t0 = time.perf_counter()
@@ -37,14 +37,22 @@ def _subtraction_rows(quick: bool) -> tuple[str, dict]:
     """Histogram subtraction trick: per-tree built-vs-derived node ledger and
     wall-clock, full build vs build-smaller-child + derive-sibling.
 
-    The scale-free ``node_rows_ratio`` is the gated signal (nightly floor
-    1.5x): the CPU oracle's scatter cost is dominated by n_rows, not by how
-    many node histograms are materialized, so the wall-clock ``speedup``
-    column hovers around 1.0x on this host and swings with machine state —
-    the real wins (halved per-page scatter, halved psum payload) show on the
-    streaming/distributed paths, not this in-core microbench."""
+    Two gated signals (nightly): the scale-free ``node_rows_ratio`` (floor
+    1.5x) and the wall-clock ``speedup`` (floor 1.0x). The speedup is real on
+    this host because the auto off-TPU path is the one-hot contraction
+    (`kernels.histogram.build_histogram_nodes_host` + per-tree
+    `prepare_bin_onehot`), whose cost scales with the build-set size like the
+    TPU kernel's MXU dot — unlike the scatter oracle, whose per-row cost is
+    identical whether a level builds all nodes or only the smaller children.
+    ``speedup`` is the median of per-pair full/sub ratios over interleaved
+    runs: pairs run back-to-back so slow host drift cancels within a pair,
+    and the median ignores scheduler spikes that a min-of-each ratio would
+    leak into the gate."""
     rng = np.random.default_rng(1)
-    n, m, B, depth = (8192 if quick else 32768), 16, 32, 6
+    # n stays full-size in quick mode: at small n the per-level dispatch
+    # overhead (identical in both modes) swamps the S-scaled contraction the
+    # speedup gate watches; quick only trims the number of timed pairs
+    n, m, B, depth = 32768, 16, 32, 6
     bins = jnp.asarray(rng.integers(0, B, (n, m)).astype(np.int32))
     g = jnp.asarray(rng.normal(size=n).astype(np.float32))
     h = jnp.asarray((rng.random(n) + 0.1).astype(np.float32))
@@ -55,9 +63,24 @@ def _subtraction_rows(quick: bool) -> tuple[str, dict]:
     cache = HistogramCache(enabled=True)  # one measured tree for the ledger
     grow_tree(bins, g, h, B, bv, tp_sub, hist_cache=cache).tree.leaf_value.block_until_ready()
 
-    iters = 2 if quick else 4
-    us_sub = _bench(lambda: grow_tree(bins, g, h, B, bv, tp_sub).tree.leaf_value, iters=iters)
-    us_full = _bench(lambda: grow_tree(bins, g, h, B, bv, tp_full).tree.leaf_value, iters=iters)
+    iters = 5 if quick else 8
+    f_sub = lambda: grow_tree(bins, g, h, B, bv, tp_sub).tree.leaf_value
+    f_full = lambda: grow_tree(bins, g, h, B, bv, tp_full).tree.leaf_value
+    jax.block_until_ready(f_sub())
+    jax.block_until_ready(f_full())
+    ratios = []
+    us_sub = us_full = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f_sub())
+        t_sub = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        jax.block_until_ready(f_full())
+        t_full = time.perf_counter() - t0
+        ratios.append(t_full / t_sub)
+        us_sub = min(us_sub, t_sub * 1e6)
+        us_full = min(us_full, t_full * 1e6)
+    speedup = float(np.median(ratios))
 
     s = cache.stats
     # node-rows = rows scanned into materialized node histograms, incl. the
@@ -75,13 +98,13 @@ def _subtraction_rows(quick: bool) -> tuple[str, dict]:
         "node_rows_ratio": round(ratio, 3),
         "tree_us_subtraction": us_sub,
         "tree_us_full_build": us_full,
-        "tree_speedup": round(us_full / us_sub, 3),
+        "tree_speedup": round(speedup, 3),
     }
     row = csv_row(
         "kernel_hist_subtraction",
         us_sub,
         f"node_rows_ratio={ratio:.2f}x built={payload['built_nodes']}"
-        f" derived={s.derived_nodes} speedup={us_full / us_sub:.2f}x",
+        f" derived={s.derived_nodes} speedup={speedup:.2f}x",
     )
     return row, payload
 

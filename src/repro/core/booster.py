@@ -100,6 +100,12 @@ class BoosterParams:
     # max_depth); max_leaves=0 means up to the 2^max_depth complete tree
     grow_policy: str = "depthwise"
     max_leaves: int = 0
+    # lossguide only: number of frontier leaves popped per histogram pass.
+    # 1 reproduces strict best-first growth; >1 amortises one partition pass
+    # and one (paged) data sweep over several splits, at the cost of not
+    # re-ranking against children created inside the same batch (identical
+    # trees when the leaf budget is not binding)
+    pop_batch: int = 1
 
     def __post_init__(self) -> None:
         if self.n_estimators < 1:
@@ -116,6 +122,8 @@ class BoosterParams:
             )
         if self.max_leaves < 0:
             raise ValueError(f"max_leaves must be >= 0; got {self.max_leaves}")
+        if self.pop_batch < 1:
+            raise ValueError(f"pop_batch must be >= 1; got {self.pop_batch}")
         if self.kernel_impl not in ("auto", "pallas", "ref"):
             raise ValueError(
                 f"kernel_impl must be 'auto', 'pallas', or 'ref'; got {self.kernel_impl!r}"
@@ -136,6 +144,7 @@ class BoosterParams:
             hist_subtraction=self.hist_subtraction,
             grow_policy=self.grow_policy,
             max_leaves=self.max_leaves,
+            pop_batch=self.pop_batch,
         )
 
 

@@ -18,14 +18,17 @@ depth >= 10 rivals the ELLPACK matrix the paper's Table-1 budget tracks.
 
   device tier   hot histograms, ready for subtraction (``budget_bytes`` caps
                 this tier; None = unlimited — bit-for-bit the old cache);
-  host tier     cold histograms spilled off-device (a synchronous
-                ``device_get`` into host RAM — overlapping the eviction with
-                the next build pass is an open item); a plan that needs one
-                back stages it through the same `repro.pipeline.PageStream`
-                engine the ELLPACK pages use, so the fetch leg shares the
-                pages' staging ledger (the round trip is accounted in
-                `TransferStats.hist_spill_bytes` / ``hist_fetch_bytes`` next
-                to the page traffic);
+  host tier     cold histograms spilled off-device. The spill is *async*:
+                eviction issues ``copy_to_host_async`` and returns, so the
+                device->host copy overlaps the next build pass; the pinned
+                host buffer materializes at a completion barrier
+                (`_host_buffer`) the moment anything needs it, which keeps a
+                fetch racing an in-flight spill bit-exact. A plan that needs
+                an entry back stages it through the same
+                `repro.pipeline.PageStream` engine the ELLPACK pages use, so
+                the fetch leg shares the pages' staging ledger (the round
+                trip is accounted in `TransferStats.hist_spill_bytes` /
+                ``hist_fetch_bytes`` next to the page traffic);
   ancestors     with ``retained_levels=K >= 2``, up to K-1 generations of
                 expanded parents are retired on-device instead of evicted, so
                 a popped node whose own histogram was spilled can be derived
@@ -132,6 +135,13 @@ class LevelPlan(NamedTuple):
     n_build: int  # static: number of histogram slots the kernel materializes
     count: int  # static: nodes at this level
     source: str = "build"
+    # global node ids of the build slots, in slot order — the fused-kernel
+    # fast path (`ops.build_histogram_nodes`): HistFns that honor it skip the
+    # caller-side window mask and the node_map remap entirely (one launch
+    # instead of lookup + scatter), and the set may be non-contiguous
+    # (batched lossguide pops). None on hand-built plans; node_map consumers
+    # (the distributed shard steps) ignore it.
+    build_nodes: Array | None = None
 
 
 @dataclasses.dataclass
@@ -194,8 +204,26 @@ def level_row_counts(positions: Array, offset: int, count: int) -> Array:
     """
     lp = positions.astype(jnp.int32) - offset
     valid = (positions >= offset) & (lp < count)
+    if count <= 64:
+        # narrow window: a vectorized compare+sum beats XLA CPU's serialized
+        # scatter (this runs once per level on the subtraction path only, so
+        # its cost lands squarely in the sub-vs-full wall-clock gap)
+        slots = jnp.arange(count, dtype=jnp.int32)
+        hit = valid[:, None] & (lp[:, None] == slots[None, :])
+        return jnp.sum(hit, axis=0).astype(jnp.int32)
     safe = jnp.where(valid, lp, count)  # overflow slot for non-window rows
     return jnp.zeros(count + 1, jnp.int32).at[safe].add(1)[:count]
+
+
+@jax.jit
+def node_row_counts(positions: Array, nodes: Array) -> Array:
+    """Rows per *global* node id in ``nodes`` (any subset, any order) — the
+    non-contiguous counterpart of `level_row_counts`, used by batched
+    lossguide pops where the popped parents' child windows do not form one
+    contiguous range. ``nodes`` is small (2 per popped parent), so the
+    broadcast compare is cheap."""
+    hit = positions[None, :].astype(jnp.int32) == nodes[:, None].astype(jnp.int32)
+    return jnp.sum(hit, axis=1).astype(jnp.int32)
 
 
 def plan_level(count: int, level_counts: Array) -> tuple[Array, Array]:
@@ -213,6 +241,23 @@ def plan_level(count: int, level_counts: Array) -> tuple[Array, Array]:
     return node_map, build_left
 
 
+@functools.partial(jax.jit, static_argnames=("count",))
+def _plan_level_fused(level_counts: Array, offset, count: int):
+    """One jitted call for everything a subtraction plan derives from the
+    level's row counts: (node_map, build_left, build_nodes, built_rows,
+    total_rows). The eager per-level dispatch overhead of computing these
+    one jnp op at a time was a measurable slice of the subtraction path's
+    wall time (the BENCH_kernels speedup=0.90x regression)."""
+    node_map, build_left = plan_level(count, level_counts)
+    pairs = count // 2
+    build_nodes = (
+        offset + 2 * jnp.arange(pairs, dtype=jnp.int32) + jnp.where(build_left, 0, 1)
+    ).astype(jnp.int32)
+    built = jnp.sum(jnp.minimum(level_counts[0::2], level_counts[1::2]))
+    total = jnp.sum(level_counts)
+    return node_map, build_left, build_nodes, built, total
+
+
 def expand_level(parent_hist: Array, built: Array, build_left: Array) -> Array:
     """Full level histogram from the compact build half: the built child keeps
     its histogram, the sibling is ``parent - built`` (exact up to f32 order)."""
@@ -222,6 +267,10 @@ def expand_level(parent_hist: Array, built: Array, build_left: Array) -> Array:
     right = jnp.where(mask, derived, built)
     pairs = built.shape[0]
     return jnp.stack([left, right], axis=1).reshape((2 * pairs,) + built.shape[1:])
+
+
+# jitted alias for the eager level loops (elementwise: bit-identical jitted)
+_expand_level_j = jax.jit(expand_level)
 
 
 class HistogramStore:
@@ -266,7 +315,16 @@ class HistogramStore:
         self.retry = retry if retry is not None else RetryPolicy()
         self.stats = HistCacheStats()
         self._device: dict[tuple, Array] = {}
-        self._host: dict[tuple, np.ndarray] = {}
+        # host tier. A key whose copy is still in flight maps to None here
+        # and holds its device array in ``_inflight`` until the completion
+        # barrier (`_host_buffer`) materializes the pinned host buffer.
+        self._host: dict[tuple, np.ndarray | None] = {}
+        # in-flight async spills: key -> device array whose device->host copy
+        # was issued but not yet awaited. Bounded by ``max_inflight_spills``
+        # (the same double-buffering depth PageStream stages with): the
+        # oldest copy is completed when a third spill would exceed it.
+        self._inflight: dict[tuple, Array] = {}
+        self.max_inflight_spills = 2
         self._nbytes: dict[tuple, int] = {}
         self._kind: dict[tuple, str] = {}  # "level" | "node" | "ancestor"
         self._priority: dict[tuple, float] = {}  # lower = colder = spills first
@@ -275,11 +333,14 @@ class HistogramStore:
         self._dev_bytes = 0
         self._build_left: Array | None = None
         self._node_build_left: Array | None = None
+        # per-parent build modes of the last `plan_nodes` batch (see there)
+        self._batch_modes: list | None = None
 
     # ------------------------------------------------------------- tier plumbing
     def reset(self) -> None:
         self._device.clear()
         self._host.clear()
+        self._inflight.clear()
         self._nbytes.clear()
         self._kind.clear()
         self._priority.clear()
@@ -287,6 +348,7 @@ class HistogramStore:
         self._dev_bytes = 0
         self._build_left = None
         self._node_build_left = None
+        self._batch_modes = None
 
     @property
     def device_bytes(self) -> int:
@@ -315,6 +377,10 @@ class HistogramStore:
         if key in self._device:
             self._dev_bytes -= self._nbytes[key]
             del self._device[key]
+        # dropping an entry whose spill is still in flight abandons the copy:
+        # the host buffer is never read, so `discard_node` racing an async
+        # spill can never resurrect or reorder against a stale histogram
+        self._inflight.pop(key, None)
         self._host.pop(key, None)
         self._nbytes.pop(key, None)
         self._kind.pop(key, None)
@@ -322,15 +388,50 @@ class HistogramStore:
         self._stamp.pop(key, None)
 
     def _spill(self, key: tuple) -> None:
-        """Device -> host: evict one cold histogram into a host buffer."""
+        """Device -> host, asynchronously: issue the device->host copy and
+        return without waiting — the next build pass overlaps the transfer.
+
+        The *logical* tier transition is immediate (``tier_of`` says "host",
+        the spill ledger is booked, the device budget is credited) so spill
+        policy and its tests are oblivious to the overlap; only the pinned
+        host buffer materializes later, at the `_host_buffer` completion
+        barrier. The device array stays referenced in ``_inflight`` until
+        then — at most ``max_inflight_spills`` copies deep, after which the
+        oldest is completed (double buffering, same depth PageStream uses).
+        Spill wall-seconds are deliberately booked nowhere: the copy runs
+        behind compute, and charging it to the stream ledger would dilute
+        ``overlap_ratio``.
+        """
         arr = self._device.pop(key)
-        host = np.asarray(jax.device_get(arr))
-        self._host[key] = host
+        try:
+            arr.copy_to_host_async()
+        except AttributeError:  # non-committed/np-backed arrays: copy is free
+            pass
+        self._inflight[key] = arr
+        self._host[key] = None  # placeholder: logically host-tier as of now
         self._dev_bytes -= self._nbytes[key]
+        nbytes = self._nbytes[key]
         ts = self.transfer_stats
         ts.hist_spills += 1
-        ts.hist_spill_bytes += host.nbytes
-        ts.device_to_host_bytes += host.nbytes
+        ts.hist_spill_bytes += nbytes
+        ts.device_to_host_bytes += nbytes
+        while len(self._inflight) > self.max_inflight_spills:
+            self._complete_spill(next(iter(self._inflight)))
+
+    def _complete_spill(self, key: tuple) -> None:
+        """Completion barrier for one in-flight spill: await the async copy
+        and pin the host buffer (np.asarray reuses the buffer the issued
+        copy landed in; it only blocks if the copy is still in flight)."""
+        arr = self._inflight.pop(key, None)
+        if arr is not None:
+            self._host[key] = np.asarray(arr)
+
+    def _host_buffer(self, key: tuple) -> np.ndarray:
+        """The host-tier buffer for ``key``, completing its spill if the
+        copy is still in flight — the barrier that keeps `_fetch` of an
+        in-flight spill bit-exact."""
+        self._complete_spill(key)
+        return self._host[key]
 
     def _fetch(self, key: tuple) -> Array:
         """Host -> device: stage a spilled histogram back through the same
@@ -345,7 +446,7 @@ class HistogramStore:
         "hist_store.fetch" fires once per fetch."""
         from repro.pipeline.stream import PageStream
 
-        host = self._host[key]  # pop only after a successful stage
+        host = self._host_buffer(key)  # pop only after a successful stage
 
         def _stage() -> Array:
             fault_inject.fire("hist_store.fetch")
@@ -404,7 +505,10 @@ class HistogramStore:
         )
         if not subtract:
             self._build_left = None
-            return LevelPlan(node_map=None, n_build=count, count=count, source="build")
+            return LevelPlan(
+                node_map=None, n_build=count, count=count, source="build",
+                build_nodes=jnp.arange(count, dtype=jnp.int32) + (count - 1),
+            )
         if parent_key in self._device:
             source = "device"
         else:
@@ -412,17 +516,20 @@ class HistogramStore:
             # fetch overlaps the histogram pass that runs before expand()
             self._fetch(parent_key)
             source = "fetched"
-        node_map, build_left = plan_level(count, level_counts)
+        node_map, build_left, build_nodes, built, total = _plan_level_fused(
+            level_counts, count - 1, count
+        )
         self._build_left = build_left
         self.stats.levels += 1
         self.stats.built_nodes += count // 2
         self.stats.derived_nodes += count - count // 2
-        built = jnp.sum(jnp.minimum(level_counts[0::2], level_counts[1::2]))
-        total = jnp.sum(level_counts)
         # tracers would leak out of a jitted caller's trace; drop stats there
         if not isinstance(built, jax.core.Tracer):
             self.stats._add_rows(built, total)
-        return LevelPlan(node_map=node_map, n_build=count // 2, count=count, source=source)
+        return LevelPlan(
+            node_map=node_map, n_build=count // 2, count=count, source=source,
+            build_nodes=build_nodes,
+        )
 
     def expand(self, plan: LevelPlan, built: Array) -> Array:
         """Compact build histogram -> full (count, m, n_bins, 2) level
@@ -432,7 +539,7 @@ class HistogramStore:
         if plan.node_map is None:
             full = built
         else:
-            full = expand_level(self._device[("L", depth - 1)], built, self._build_left)
+            full = _expand_level_j(self._device[("L", depth - 1)], built, self._build_left)
         if self.enabled:
             self._put(("L", depth), full, kind="level", priority=float(depth))
             # depthwise retains exactly one level: the fresh one is the next
@@ -499,9 +606,13 @@ class HistogramStore:
         slot and the sibling is derived in `expand_node`.
         """
         key = ("N", parent)
+        children = jnp.arange(2, dtype=jnp.int32) + (2 * parent + 1)
         if not (self.enabled and child_counts is not None):
             self._node_build_left = None
-            return LevelPlan(node_map=None, n_build=2, count=2, source="build")
+            return LevelPlan(
+                node_map=None, n_build=2, count=2, source="build",
+                build_nodes=children,
+            )
         if key in self._device:
             source = "device"
         else:
@@ -517,17 +628,48 @@ class HistogramStore:
             else:
                 self._node_build_left = None
                 self.stats.rebuilt_nodes += 1
-                return LevelPlan(node_map=None, n_build=2, count=2, source="build")
-        node_map, build_left = plan_level(2, child_counts)
+                return LevelPlan(
+                    node_map=None, n_build=2, count=2, source="build",
+                    build_nodes=children,
+                )
+        node_map, build_left, build_nodes, built, total = _plan_level_fused(
+            child_counts, 2 * parent + 1, 2
+        )
         self._node_build_left = build_left
         self.stats.levels += 1
         self.stats.built_nodes += 1
         self.stats.derived_nodes += 1
-        built = jnp.minimum(child_counts[0], child_counts[1])
-        total = child_counts[0] + child_counts[1]
         if not isinstance(built, jax.core.Tracer):
             self.stats._add_rows(built, total)
-        return LevelPlan(node_map=node_map, n_build=1, count=2, source=source)
+        return LevelPlan(
+            node_map=node_map, n_build=1, count=2, source=source,
+            build_nodes=build_nodes,
+        )
+
+    def _store_pair(self, parent: int, pair: Array) -> None:
+        """Store a popped parent's two child histograms as frontier nodes and
+        retire (``retained_levels >= 2``) or evict the parent."""
+        key = ("N", parent)
+        self._put(("N", 2 * parent + 1), pair[0], kind="node", priority=_HOT)
+        self._put(("N", 2 * parent + 2), pair[1], kind="node", priority=_HOT)
+        if self.retained_levels > 1 and key in self._device:
+            # retire the parent: its depth orders ancestor drops, and the
+            # chain for its descendants may reach it without a transfer
+            self._kind[key] = "ancestor"
+            self._priority[key] = float((parent + 1).bit_length() - 1)
+            self._inflight.pop(key, None)
+            self._host.pop(key, None)
+            # prune path ancestors the bounded chain can no longer reach
+            cur, steps = parent, 0
+            while cur > 0:
+                cur = (cur - 1) // 2
+                steps += 1
+                akey = ("N", cur)
+                if steps >= self.retained_levels - 1 and self._kind.get(akey) == "ancestor":
+                    self._drop(akey)
+        else:
+            self._drop(key)
+        self._enforce_budget()
 
     def expand_node(self, parent: int, plan: LevelPlan, built: Array) -> Array:
         """Compact build -> full (2, m, n_bins, 2) child histograms; stores
@@ -537,28 +679,121 @@ class HistogramStore:
         if plan.node_map is None:
             full = built
         else:
-            full = expand_level(self._device[key][None], built, self._node_build_left)
+            full = _expand_level_j(self._device[key][None], built, self._node_build_left)
         if self.enabled:
-            self._put(("N", 2 * parent + 1), full[0], kind="node", priority=_HOT)
-            self._put(("N", 2 * parent + 2), full[1], kind="node", priority=_HOT)
-            if self.retained_levels > 1 and key in self._device:
-                # retire the parent: its depth orders ancestor drops, and the
-                # chain for its descendants may reach it without a transfer
-                self._kind[key] = "ancestor"
-                self._priority[key] = float((parent + 1).bit_length() - 1)
-                self._host.pop(key, None)
-                # prune path ancestors the bounded chain can no longer reach
-                cur, steps = parent, 0
-                while cur > 0:
-                    cur = (cur - 1) // 2
-                    steps += 1
-                    akey = ("N", cur)
-                    if steps >= self.retained_levels - 1 and self._kind.get(akey) == "ancestor":
-                        self._drop(akey)
-            else:
-                self._drop(key)
-            self._enforce_budget()
+            self._store_pair(parent, full)
         return full
+
+    # ----------------------------------------------- batched pops (best-first)
+    def plan_nodes(self, parents: list[int], child_counts: Array | None) -> LevelPlan:
+        """Batched `plan_node`: one fused plan for several popped parents, so
+        all their child histograms ride a single HistFn pass (one PageStream
+        pass out-of-core instead of one per pop).
+
+        ``parents`` must be sorted ascending (the drivers sort — array slots
+        then follow global node order deterministically); ``child_counts`` is
+        ``(2 * len(parents),)`` in [left_0, right_0, left_1, right_1, ...]
+        order. Each parent resolves independently through the same order as
+        `plan_node` (device -> ancestor chain -> host fetch -> rebuild):
+        resolved parents contribute their *smaller* child to the build set
+        (ties build left), unresolved parents contribute both children. The
+        returned plan's ``build_nodes`` is the (possibly non-contiguous)
+        union, in parent order; ``node_map`` is None — batched windows are
+        not contiguous, only the fused kernel path serves them.
+        """
+        k = len(parents)
+        count = 2 * k
+        if not (self.enabled and child_counts is not None):
+            self._batch_modes = [("full", None)] * k
+            build_nodes = jnp.asarray(
+                [2 * p + 1 + c for p in parents for c in (0, 1)], jnp.int32
+            )
+            return LevelPlan(
+                node_map=None, n_build=count, count=count, source="build",
+                build_nodes=build_nodes,
+            )
+        counts_np = np.asarray(child_counts)
+        modes: list[tuple[str, bool | None]] = []
+        nodes: list[int] = []
+        sources: set[str] = set()
+        built_rows = 0.0
+        total_rows = 0.0
+        for i, parent in enumerate(parents):
+            key = ("N", parent)
+            if key in self._device:
+                resolved = True
+                sources.add("device")
+            else:
+                chain = self._derive_from_chain(parent)
+                if chain is not None:
+                    prio = self._priority.get(key, _HOT)
+                    self._put(key, chain, kind="node", priority=prio)
+                    self.stats.chain_derived_nodes += 1
+                    sources.add("derived")
+                    resolved = True
+                elif key in self._host:
+                    self._fetch(key)
+                    sources.add("fetched")
+                    resolved = True
+                else:
+                    resolved = False
+            left_n, right_n = int(counts_np[2 * i]), int(counts_np[2 * i + 1])
+            if resolved:
+                build_left = left_n <= right_n
+                modes.append(("sub", build_left))
+                nodes.append(2 * parent + 1 + (0 if build_left else 1))
+                self.stats.levels += 1
+                self.stats.built_nodes += 1
+                self.stats.derived_nodes += 1
+                built_rows += min(left_n, right_n)
+                total_rows += left_n + right_n
+            else:
+                modes.append(("full", None))
+                nodes.extend((2 * parent + 1, 2 * parent + 2))
+                self.stats.rebuilt_nodes += 1
+                sources.add("build")
+        self._batch_modes = modes
+        if total_rows:
+            self.stats._add_rows(
+                jnp.asarray(built_rows, jnp.float32), jnp.asarray(total_rows, jnp.float32)
+            )
+        # aggregate source label, most expensive resolution wins the name
+        source = next(
+            (s for s in ("fetched", "derived", "build", "device") if s in sources),
+            "device",
+        )
+        return LevelPlan(
+            node_map=None, n_build=len(nodes), count=count, source=source,
+            build_nodes=jnp.asarray(nodes, jnp.int32),
+        )
+
+    def expand_nodes(self, parents: list[int], plan: LevelPlan, built: Array) -> Array:
+        """Batched `expand_node`: reconstruct every popped parent's child pair
+        from the fused build histogram and store/retire exactly as the
+        per-node path does. Returns ``(2 * len(parents), m, n_bins, 2)`` in
+        [left_0, right_0, left_1, right_1, ...] order."""
+        modes = self._batch_modes
+        self._batch_modes = None
+        pairs: list[Array] = []
+        slot = 0
+        # derive every pair before storing any: storing triggers budget
+        # enforcement, which could spill a later parent mid-batch
+        for i, parent in enumerate(parents):
+            mode, build_left = modes[i]
+            if mode == "full":
+                pair = built[slot:slot + 2]
+                slot += 2
+            else:
+                b = built[slot]
+                slot += 1
+                # same elementwise math as expand_level on a 1-pair window
+                derived = self._device[("N", parent)] - b
+                pair = jnp.stack([b, derived] if build_left else [derived, b])
+            pairs.append(pair)
+        if self.enabled:
+            for parent, pair in zip(parents, pairs):
+                self._store_pair(parent, pair)
+        return jnp.concatenate(pairs, axis=0)
 
 
 class HistogramCache(HistogramStore):

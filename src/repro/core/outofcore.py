@@ -33,7 +33,12 @@ import numpy as np
 
 from repro.core.booster import BoosterParams, GradientBooster
 from repro.core.ellpack import DEFAULT_PAGE_BYTES
-from repro.core.histcache import HistogramCache, LevelPlan, level_row_counts
+from repro.core.histcache import (
+    HistogramCache,
+    LevelPlan,
+    level_row_counts,
+    node_row_counts,
+)
 from repro.core.policy import ExecutionPolicy
 from repro.core.tree import predict_tree_bins, tree_growth_driver
 from repro.data.pages import GLOBAL_STATS, TransferStats
@@ -150,10 +155,20 @@ def build_tree_paged(
         return subset_stream(active)
 
     def hist_fn(offset: int, count: int, plan: LevelPlan) -> Array:
-        # one double-buffered pass per level; page k+1 stages while page k's
-        # histogram kernel runs
+        # one double-buffered pass per level (or per pop batch); page k+1
+        # stages while page k's histogram kernel runs. ``count`` is the
+        # driver's window span — for batched pops it covers every popped
+        # parent's children (a superset of the build set, so the page-skip
+        # predicate stays conservative); plan.count would be too narrow then.
+        stream = start_stream(offset, count)
+        if plan.build_nodes is not None:
+            # fused fast path: one launch per page, raw global positions
+            return ops.build_histogram_paged(
+                stream, g_j, h_j, positions, offset, plan.n_build, n_bins,
+                impl=impl, build_nodes=plan.build_nodes,
+            )
         return ops.build_histogram_paged(
-            start_stream(offset, plan.count), g_j, h_j, positions, offset,
+            stream, g_j, h_j, positions, offset,
             plan.n_build, n_bins, node_map=plan.node_map, impl=impl,
         )
 
@@ -181,7 +196,11 @@ def build_tree_paged(
                 default_left, is_leaf, impl=impl,
             )
             if count_level is not None:
-                c = level_row_counts(positions[sp.index], *count_level)
+                c = (
+                    level_row_counts(positions[sp.index], *count_level)
+                    if isinstance(count_level, tuple)
+                    else node_row_counts(positions[sp.index], count_level)
+                )
                 counts = c if counts is None else counts + c
         return counts
 

@@ -46,7 +46,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.histcache import HistogramCache, LevelPlan, level_row_counts
+from repro.core.histcache import (
+    HistogramCache,
+    LevelPlan,
+    level_row_counts,
+    node_row_counts,
+)
 from repro.core.split import LevelSplits, SplitParams, evaluate_splits, leaf_weight
 from repro.kernels import ops
 
@@ -89,6 +94,15 @@ class TreeParams:
     # lossguide leaf budget; 0 = unbounded (up to the 2^max_depth complete
     # tree). Ignored by depthwise (XGBoost semantics for grow_policy).
     max_leaves: int = 0
+    # lossguide: pop up to this many frontier leaves per iteration so their
+    # child windows share ONE HistFn pass and ONE PartitionFn pass (one
+    # disk->host->device PageStream pass out-of-core instead of one per pop).
+    # 1 (the default) is exactly strictly-best-first; >1 pops the current
+    # top-k without re-ranking against the just-created children, which is
+    # identical at a full leaf budget (every positive-gain candidate is
+    # eventually popped; split decisions are per-node) but may keep different
+    # leaves under a tight ``max_leaves``. Ignored by depthwise.
+    pop_batch: int = 1
 
     def __post_init__(self) -> None:
         if self.grow_policy not in GROW_POLICIES:
@@ -97,6 +111,8 @@ class TreeParams:
             )
         if self.max_leaves < 0:
             raise ValueError(f"max_leaves must be >= 0, got {self.max_leaves}")
+        if self.pop_batch < 1:
+            raise ValueError(f"pop_batch must be >= 1, got {self.pop_batch}")
 
     @property
     def effective_max_depth(self) -> int:
@@ -140,7 +156,13 @@ class TreeBuildResult(NamedTuple):
 # node id through ``plan.node_map`` (pass it to `ops.build_histogram` /
 # `ops.build_histogram_paged`, which do the remap) so rows at derive-set nodes
 # contribute to no bin and only ``plan.n_build`` node histograms are
-# materialized. The driver reconstructs derive-set histograms by subtraction
+# materialized. When ``plan.build_nodes`` is set (every store-produced plan),
+# implementations should prefer the fused path instead: hand the *raw global*
+# positions plus ``plan.build_nodes`` to `ops.build_histogram_nodes` — the
+# window mask and node_map remap then happen inside one kernel launch, and
+# the build set may be non-contiguous (batched lossguide pops, where
+# ``count`` spans [offset, offset + count) over several popped parents'
+# children). The driver reconstructs derive-set histograms by subtraction
 # from the resolved parent before split evaluation; ``plan.source`` records
 # how the store resolved that parent (device / fetched from the host tier /
 # derived from an ancestor chain) — a "build" plan means nothing resolved and
@@ -159,9 +181,13 @@ HistFn = Callable[[int, int, LevelPlan], Array]
 # — the next level, or the freshly split node's 2-child window — and the
 # implementation must return that window's per-node row counts (summed across
 # pages/shards — use `core.histcache.level_row_counts`) so the cache can put
-# the smaller child of each pair in the build set.
+# the smaller child of each pair in the build set. Batched lossguide pops
+# (``pop_batch > 1``) pass an int32 *array* of global node ids instead of the
+# (offset, count) tuple — the popped parents' children are not contiguous —
+# and the implementation must return per-node counts in that order (use
+# `core.histcache.node_row_counts`).
 PartitionFn = Callable[
-    [Array, Array, Array, Array, "tuple[int, int] | None"], Array | None
+    [Array, Array, Array, Array, "tuple[int, int] | Array | None"], Array | None
 ]
 
 
@@ -372,38 +398,83 @@ def grow_tree_lossguide_generic(
 
     n_leaves = 1
     if eff_depth >= 1 and max_leaves >= 2:
-        root_hist = hist_fn(0, 1, LevelPlan(node_map=None, n_build=1, count=1))
+        root_hist = hist_fn(
+            0, 1,
+            LevelPlan(
+                node_map=None, n_build=1, count=1,
+                build_nodes=jnp.zeros(1, jnp.int32),
+            ),
+        )
         cache.put_node(0, root_hist[0])
         push_candidates(0, root_hist, node_g[:1], node_h[:1])
 
+    pop_batch = max(1, params.pop_batch)
     while frontier and n_leaves < max_leaves:
-        _, node, cand = heapq.heappop(frontier)
-        left, right = 2 * node + 1, 2 * node + 2
-        feature = feature.at[node].set(cand.feature)
-        split_bin = split_bin.at[node].set(cand.split_bin)
-        default_left = default_left.at[node].set(cand.default_left)
-        is_leaf = is_leaf.at[node].set(False)
-        node_g = node_g.at[left].set(cand.left_g)
-        node_h = node_h.at[left].set(cand.left_h)
-        node_g = node_g.at[right].set(cand.right_g)
-        node_h = node_h.at[right].set(cand.right_h)
-        n_leaves += 1
+        # pop up to pop_batch frontier leaves; their splits are written
+        # together so ONE repartition pass moves every popped node's rows and
+        # (when any is expandable) ONE histogram pass covers all their child
+        # windows — out-of-core, that is one PageStream pass per batch
+        # instead of one per pop
+        batch: list[tuple[int, bool]] = []
+        while frontier and len(batch) < pop_batch and n_leaves < max_leaves:
+            _, node, cand = heapq.heappop(frontier)
+            left, right = 2 * node + 1, 2 * node + 2
+            feature = feature.at[node].set(cand.feature)
+            split_bin = split_bin.at[node].set(cand.split_bin)
+            default_left = default_left.at[node].set(cand.default_left)
+            is_leaf = is_leaf.at[node].set(False)
+            node_g = node_g.at[left].set(cand.left_g)
+            node_h = node_h.at[left].set(cand.left_h)
+            node_g = node_g.at[right].set(cand.right_g)
+            node_h = node_h.at[right].set(cand.right_h)
+            n_leaves += 1
+            # children sit at depth(node) + 1 == (node+1).bit_length(); they
+            # can only split if their own children still fit under eff_depth
+            expandable = (node + 1).bit_length() < eff_depth and n_leaves < max_leaves
+            batch.append((node, expandable))
 
-        # children sit at depth(node) + 1 == (node+1).bit_length(); they can
-        # only split if their own children would still fit under eff_depth
-        expandable = (node + 1).bit_length() < eff_depth and n_leaves < max_leaves
-        # per-node repartition: only the popped node's rows move (all other
+        # parents sorted ascending: the batch plan's slot order then follows
+        # global node order, deterministically across builders
+        parents = sorted(node for node, expandable in batch if expandable)
+        for node, expandable in batch:
+            if not expandable:
+                cache.discard_node(node)
+
+        # per-node repartition: only the popped nodes' rows move (all other
         # nodes are leaves, so their rows stay frozen); the child row counts
         # feed the build/derive choice
-        count_window = (left, 2) if (expandable and cache.enabled) else None
+        if parents and cache.enabled:
+            count_window = (
+                (2 * parents[0] + 1, 2)
+                if len(parents) == 1
+                else jnp.asarray(
+                    [2 * p + 1 + c for p in parents for c in (0, 1)], jnp.int32
+                )
+            )
+        else:
+            count_window = None
         counts = partition_fn(feature, split_bin, default_left, is_leaf, count_window)
-        if expandable:
+
+        if len(parents) == 1:
+            # single pop: exactly the strictly-best-first per-node path
+            node = parents[0]
+            left = 2 * node + 1
             plan = cache.plan_node(node, counts)
             built = hist_fn(left, 2, plan)
             child_hist = cache.expand_node(node, plan, built)
-            push_candidates(left, child_hist, node_g[left:right + 1], node_h[left:right + 1])
-        else:
-            cache.discard_node(node)
+            push_candidates(left, child_hist, node_g[left:left + 2], node_h[left:left + 2])
+        elif parents:
+            lo = 2 * parents[0] + 1
+            span = 2 * parents[-1] + 2 - lo + 1
+            plan = cache.plan_nodes(parents, counts)
+            built = hist_fn(lo, span, plan)
+            child_hist = cache.expand_nodes(parents, plan, built)
+            for i, node in enumerate(parents):
+                left = 2 * node + 1
+                push_candidates(
+                    left, child_hist[2 * i:2 * i + 2],
+                    node_g[left:left + 2], node_h[left:left + 2],
+                )
 
     # budget exhausted: pending frontier nodes stay leaves
     for _, node, _ in frontier:
@@ -449,9 +520,19 @@ def grow_tree(
     ``params.grow_policy == "lossguide"``): one device-resident ELLPACK page."""
     n_rows = bins.shape[0]
     pos_box = [jnp.zeros(n_rows, jnp.int32)]
+    # level-invariant precompute for the host contraction (None on kernel /
+    # oracle paths or when too large — then each call computes it inline)
+    bin_oh = ops.prepare_bin_onehot(bins, n_bins, impl=impl)
 
     def hist_fn(offset: int, count: int, plan: LevelPlan) -> Array:
         pos = pos_box[0]
+        if plan.build_nodes is not None:
+            # fused fast path: window mask + node_map remap happen inside the
+            # kernel (one launch), raw global positions go straight in
+            return ops.build_histogram_nodes(
+                bins, g, h, pos, plan.build_nodes, n_bins, impl=impl,
+                bin_onehot=bin_oh,
+            )
         # rows outside [offset, offset + plan.count) — frozen at shallower
         # leaves, or live at other heap nodes during a per-node pass — hit no bin
         level_pos = jnp.where(
@@ -468,7 +549,9 @@ def grow_tree(
         )
         if count_level is None:
             return None
-        return level_row_counts(pos_box[0], *count_level)
+        if isinstance(count_level, tuple):
+            return level_row_counts(pos_box[0], *count_level)
+        return node_row_counts(pos_box[0], count_level)  # batched pops
 
     tree = tree_growth_driver(params)(
         hist_fn,

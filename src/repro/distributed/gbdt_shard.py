@@ -348,6 +348,13 @@ def _grow_tree_distributed_lossguide(
     identical on every shard (and to the single-device builder's).
     """
     check_feature_parallel_lossguide(tp, cfg)
+    if tp.pop_batch != 1:
+        # the compiled per-pop SPMD step set covers contiguous 2-child
+        # windows only ((window, n_build) in {(1,1),(2,1),(2,2)}); batched
+        # non-contiguous pops would compile a fresh step per batch shape.
+        # Pin single pops here — the paged distributed builder (which shares
+        # `build_tree_paged`) does honor pop_batch.
+        tp = dataclasses.replace(tp, pop_batch=1)
     bins_spec = P(cfg.data_axes, None)
     vec_spec = P(cfg.data_axes)
     rep = P()

@@ -23,6 +23,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._backend import resolve_interpret
 from repro.kernels.ref import apply_node_map
@@ -61,6 +62,54 @@ def _hist_kernel(bins_ref, g_ref, h_ref, pos_ref, out_ref, *, n_nodes: int, n_bi
         out_ref[...] = jnp.zeros_like(out_ref)
 
     out_ref[...] += update
+
+
+def _fused_hist_kernel(
+    nodes_ref, bins_ref, g_ref, h_ref, pos_ref, out_ref, acc_ref, *, n_bins: int
+):
+    """Fused bin-lookup + multi-node scatter, one launch per (feat, row) tile.
+
+    Fuses what used to be two separate device passes — the caller-side window
+    mask / `apply_node_map` remap and the one-hot scatter — into a single
+    kernel: rows are matched against the *global* node ids in ``nodes_ref``
+    directly (a broadcast compare, no gather), so non-contiguous build sets
+    (batched lossguide pops) cost nothing extra. The accumulator is privatized
+    in VMEM scratch (`acc_ref`) across the sequential row-tile grid dim —
+    the Pallas analogue of CUDA's shared-memory histogram privatization —
+    and flushed to the output block once, on the last row step.
+    """
+    r_step = pl.program_id(1)
+    bins = bins_ref[...]  # (R, Ft) int32
+    g = g_ref[...]  # (R,) f32
+    h = h_ref[...]
+    pos = pos_ref[...]  # (R,) int32 global node ids
+    nodes = nodes_ref[...]  # (S,) int32 global build-node ids (all >= 0)
+    R, Ft = bins.shape
+    S = nodes.shape[0]
+
+    # pad rows carry pos == -1 and match no build node (nodes are all >= 0)
+    slot_oh = (pos[:, None] == nodes[None, :]).astype(jnp.float32)  # (R, S)
+    bin_iota = jax.lax.broadcasted_iota(jnp.int32, (R, Ft, n_bins), 2)
+    valid = (bins != MISSING_BIN)[..., None]
+    bin_oh = jnp.where((bins[..., None] == bin_iota) & valid, 1.0, 0.0)
+    bin_oh = bin_oh.reshape(R, Ft * n_bins)
+
+    # one MXU contraction for both gradients: stack g- and h-weighted one-hots
+    # along the slot axis, (R, 2S) @ (R, Ft*B) -> (2S, Ft*B)
+    wm = jnp.concatenate([slot_oh * g[:, None], slot_oh * h[:, None]], axis=1)
+    contract = (((0,), (0,)), ((), ()))  # contract rows
+    hist = jax.lax.dot_general(wm, bin_oh, contract, preferred_element_type=jnp.float32)
+    update = hist.reshape(2, S, Ft, n_bins).transpose(1, 2, 3, 0)  # (S, Ft, B, 2)
+
+    @pl.when(r_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += update
+
+    @pl.when(r_step == pl.num_programs(1) - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...]
 
 
 def _pad_to(x: jax.Array, size: int, axis: int, fill) -> jax.Array:
@@ -122,3 +171,150 @@ def build_histogram(
         interpret=interpret,
     )(bins_p, g_p, h_p, pos_p)
     return out[:, :m]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("n_bins", "row_tile", "feat_tile", "interpret")
+)
+def build_histogram_nodes(
+    bins: jax.Array,  # (n_rows, m) int32 (uint8 ok; cast below)
+    g: jax.Array,
+    h: jax.Array,
+    positions: jax.Array,  # (n_rows,) int32 GLOBAL node ids; < 0 = inactive
+    build_nodes: jax.Array,  # (n_build,) int32 global build-node ids, all >= 0
+    n_bins: int,
+    *,
+    row_tile: int = 256,
+    feat_tile: int = 8,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused histogram over an explicit build-node set (the fused fast path).
+
+    ``out[s]`` is the (m, n_bins, 2) gradient histogram of global node
+    ``build_nodes[s]``. Rows whose position is not in ``build_nodes`` — frozen
+    leaves, derive-set siblings, rows at other heap nodes — contribute to no
+    bin; the window masking and node_map compaction the two-launch path did
+    on the host side happen inside the kernel (a broadcast compare against
+    the node-id vector), so one launch replaces lookup + scatter.
+    """
+    interpret = resolve_interpret(interpret)
+    n_rows, m = bins.shape
+    n_build = build_nodes.shape[0]
+    r_pad = -n_rows % row_tile
+    f_pad = -m % feat_tile
+    n_rows_p, m_p = n_rows + r_pad, m + f_pad
+
+    bins_p = _pad_to(_pad_to(bins.astype(jnp.int32), n_rows_p, 0, MISSING_BIN), m_p, 1, MISSING_BIN)
+    g_p = _pad_to(g.astype(jnp.float32), n_rows_p, 0, 0.0)
+    h_p = _pad_to(h.astype(jnp.float32), n_rows_p, 0, 0.0)
+    pos_p = _pad_to(positions.astype(jnp.int32), n_rows_p, 0, -1)
+    nodes = build_nodes.astype(jnp.int32)
+
+    grid = (m_p // feat_tile, n_rows_p // row_tile)
+    out = pl.pallas_call(
+        functools.partial(_fused_hist_kernel, n_bins=n_bins),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_build,), lambda f, r: (0,)),
+            pl.BlockSpec((row_tile, feat_tile), lambda f, r: (r, f)),
+            pl.BlockSpec((row_tile,), lambda f, r: (r,)),
+            pl.BlockSpec((row_tile,), lambda f, r: (r,)),
+            pl.BlockSpec((row_tile,), lambda f, r: (r,)),
+        ],
+        out_specs=pl.BlockSpec(
+            (n_build, feat_tile, n_bins, 2), lambda f, r: (0, f, 0, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_build, m_p, n_bins, 2), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((n_build, feat_tile, n_bins, 2), jnp.float32)],
+        interpret=interpret,
+    )(nodes, bins_p, g_p, h_p, pos_p)
+    return out[:, :m]
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins",))
+def bin_onehot(bins: jax.Array, n_bins: int) -> jax.Array:
+    """(n_rows, m * n_bins) f32 bin one-hot for the host contraction. ``bins``
+    is level-invariant, so callers that build many node sets over the same
+    rows (the per-tree level loop) compute this once and pass it to
+    `build_histogram_nodes_host` — per-level cost then reduces to the dot,
+    which scales with the build-set size. MISSING_BIN rows one-hot to zero."""
+    bin_iota = jnp.arange(n_bins, dtype=jnp.int32)
+    oh = (bins.astype(jnp.int32)[..., None] == bin_iota).astype(jnp.float32)
+    return oh.reshape(bins.shape[0], bins.shape[1] * n_bins)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins", "row_chunk"))
+def build_histogram_nodes_host(
+    bins: jax.Array,
+    g: jax.Array,
+    h: jax.Array,
+    positions: jax.Array,  # (n_rows,) int32 GLOBAL node ids; < 0 = inactive
+    build_nodes: jax.Array,  # (n_build,) int32 global build-node ids, all >= 0
+    n_bins: int,
+    bin_oh: jax.Array | None = None,  # optional precomputed `bin_onehot(bins)`
+    *,
+    row_chunk: int = 4096,
+) -> jax.Array:
+    """jnp mirror of the fused kernel's one-hot contraction, for non-TPU
+    backends. Unlike the scatter oracle — whose cost is per-row and therefore
+    identical whether a level builds all nodes or only the smaller children —
+    this dot's cost scales with the build-set size, so histogram subtraction
+    halves the dominant term off-TPU exactly as it does on the MXU.
+
+    With a precomputed ``bin_oh`` (see `bin_onehot`) the whole contraction is
+    one BLAS dot. Without it, rows are processed in fixed ``row_chunk``
+    blocks under `lax.scan`, bounding the one-hot working set to
+    ``row_chunk * m * n_bins`` floats. Both paths are deterministic
+    call-to-call, but their f32 accumulation groupings differ — a builder
+    must pick one path for a whole fit (they already sum pages/chunks in
+    path-specific order, same as the paged-vs-in-core split)."""
+    n_rows, m = bins.shape
+    s = build_nodes.shape[0]
+    nodes = build_nodes.astype(jnp.int32)
+
+    if bin_oh is not None:
+        # precomputed one-hot: one full-height BLAS dot, no chunking (the
+        # scan's slice/concat overhead would dominate the S-scaled dot)
+        slot_oh = (positions.astype(jnp.int32)[:, None] == nodes[None, :]).astype(jnp.float32)
+        wm = jnp.concatenate(
+            [slot_oh * g.astype(jnp.float32)[:, None],
+             slot_oh * h.astype(jnp.float32)[:, None]],
+            axis=1,
+        )
+        acc = jax.lax.dot_general(
+            wm, bin_oh, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        return acc.reshape(2, s, m, n_bins).transpose(1, 2, 3, 0)
+
+    pad = -n_rows % row_chunk
+    # pad rows match no node (pos -1 vs non-negative ids) and no bin
+    bins_p = jnp.pad(bins.astype(jnp.int32), ((0, pad), (0, 0)), constant_values=MISSING_BIN)
+    bin_iota = jnp.arange(n_bins, dtype=jnp.int32)
+    oh_p = (bins_p[..., None] == bin_iota).astype(jnp.float32).reshape(
+        n_rows + pad, m * n_bins
+    )
+    g_p = jnp.pad(g.astype(jnp.float32), (0, pad))
+    h_p = jnp.pad(h.astype(jnp.float32), (0, pad))
+    pos_p = jnp.pad(positions.astype(jnp.int32), (0, pad), constant_values=-1)
+    n_chunks = (n_rows + pad) // row_chunk
+
+    def body(acc, xs):
+        oh_c, g_c, h_c, pos_c = xs
+        slot_oh = (pos_c[:, None] == nodes[None, :]).astype(jnp.float32)  # (R, S)
+        wm = jnp.concatenate([slot_oh * g_c[:, None], slot_oh * h_c[:, None]], axis=1)
+        hist = jax.lax.dot_general(
+            wm,
+            oh_c,
+            (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # (2S, F*B)
+        return acc + hist, None
+
+    xs = (
+        oh_p.reshape(n_chunks, row_chunk, m * n_bins),
+        g_p.reshape(n_chunks, row_chunk),
+        h_p.reshape(n_chunks, row_chunk),
+        pos_p.reshape(n_chunks, row_chunk),
+    )
+    acc, _ = jax.lax.scan(body, jnp.zeros((2 * s, m * n_bins), jnp.float32), xs)
+    return acc.reshape(2, s, m, n_bins).transpose(1, 2, 3, 0)

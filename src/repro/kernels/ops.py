@@ -36,6 +36,7 @@ def _resolve(impl: str) -> str:
 
 
 _ref_build_histogram = jax.jit(_ref.build_histogram, static_argnames=("n_nodes", "n_bins"))
+_ref_build_histogram_nodes = jax.jit(_ref.build_histogram_nodes, static_argnames=("n_bins",))
 _ref_bin_values = jax.jit(_ref.bin_values)
 _ref_partition_rows = jax.jit(_ref.partition_rows)
 _ref_predict_bins = jax.jit(_ref.predict_bins, static_argnames=("max_depth",))
@@ -59,6 +60,47 @@ def build_histogram(
     )
 
 
+def build_histogram_nodes(
+    bins, g, h, positions, build_nodes, n_bins: int, impl: str = "auto",
+    bin_onehot=None,
+):
+    """Fused histogram over an explicit global build-node set (see
+    `core.histcache.LevelPlan.build_nodes`): one launch replaces the
+    window-mask + node_map-remap + scatter sequence of `build_histogram`.
+    ``positions`` are raw global node ids; ``out[s]`` is the histogram of
+    ``build_nodes[s]``. The build set may be non-contiguous (batched
+    lossguide pops). ``bin_onehot`` (from `prepare_bin_onehot`) is a
+    level-invariant precompute used only by the host contraction; kernel and
+    oracle paths ignore it."""
+    if _resolve(impl) == "pallas":
+        return _histogram.build_histogram_nodes(bins, g, h, positions, build_nodes, n_bins)
+    if (_FORCE or impl) == "auto":
+        # off-TPU fast path: jnp mirror of the kernel's one-hot contraction.
+        # Its cost scales with the build-set size, so subtraction pays off-TPU
+        # too; the scatter oracle's cost is row-dominated and mode-independent.
+        return _histogram.build_histogram_nodes_host(
+            bins, g, h, positions, build_nodes, n_bins, bin_onehot
+        )
+    return _ref_build_histogram_nodes(bins, g, h, positions, build_nodes, n_bins=n_bins)
+
+
+def prepare_bin_onehot(bins, n_bins: int, impl: str = "auto", cap_bytes: int = 256 * 2**20):
+    """Per-tree precompute for `build_histogram_nodes`: the f32 bin one-hot
+    the host contraction would otherwise rebuild every level (bins are
+    level-invariant). Returns None — compute-on-the-fly — when the resolved
+    impl is not the host contraction or the one-hot would exceed
+    ``cap_bytes`` (it costs ``n_rows * m * n_bins * 4`` bytes). The
+    precomputed path contracts in one dot, the on-the-fly path in row
+    chunks; each is deterministic, but their f32 groupings differ in final
+    ulps — use one consistently per fit (the in-core builder decides once
+    per tree, before the level loop)."""
+    if _resolve(impl) == "pallas" or (_FORCE or impl) != "auto":
+        return None
+    if bins.shape[0] * bins.shape[1] * n_bins * 4 > cap_bytes:
+        return None
+    return _histogram.bin_onehot(bins, n_bins)
+
+
 def build_histogram_paged(
     stream: Iterable,
     g,
@@ -69,6 +111,7 @@ def build_histogram_paged(
     n_bins: int,
     node_map=None,
     impl: str = "auto",
+    build_nodes=None,
 ):
     """Page-batched histogram: sum per-page level histograms over one stream pass.
 
@@ -86,23 +129,33 @@ def build_histogram_paged(
     node_map length (or ``count`` for a full build). Rows outside it — frozen
     at shallower leaves, or live at *other* heap nodes during a best-first
     per-node pass — contribute to no bin.
+
+    With ``build_nodes`` (the fused fast path) the window mask and node_map
+    remap fold into the kernel itself: each page's raw global positions go
+    straight to `build_histogram_nodes`, one launch per page instead of the
+    lookup + scatter pair, and the build set may be non-contiguous (batched
+    lossguide pops). ``offset``/``count``/``node_map`` are ignored then,
+    except that ``count`` must equal ``build_nodes.shape[0]``.
     """
     window = node_map.shape[0] if node_map is not None else count
     hist = None
     for page in stream:
         ro, nr = page.host.row_offset, page.host.n_rows
         pos = positions[page.index]
-        level_pos = jnp.where((pos >= offset) & (pos < offset + window), pos - offset, -1)
-        hp = build_histogram(
-            page.device,
-            jax.lax.dynamic_slice(g, (ro,), (nr,)),
-            jax.lax.dynamic_slice(h, (ro,), (nr,)),
-            level_pos,
-            count,
-            n_bins,
-            node_map=node_map,
-            impl=impl,
-        )
+        gp = jax.lax.dynamic_slice(g, (ro,), (nr,))
+        hp_ = jax.lax.dynamic_slice(h, (ro,), (nr,))
+        if build_nodes is not None:
+            hp = build_histogram_nodes(
+                page.device, gp, hp_, pos, build_nodes, n_bins, impl=impl
+            )
+        else:
+            level_pos = jnp.where(
+                (pos >= offset) & (pos < offset + window), pos - offset, -1
+            )
+            hp = build_histogram(
+                page.device, gp, hp_, level_pos, count, n_bins,
+                node_map=node_map, impl=impl,
+            )
         hist = hp if hist is None else hist + hp
     return hist
 

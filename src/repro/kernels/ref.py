@@ -70,6 +70,30 @@ def build_histogram(
     )
 
 
+def build_histogram_nodes(
+    bins: jax.Array,  # (n_rows, m) int32 local bin indices (MISSING_BIN = missing)
+    g: jax.Array,  # (n_rows,) f32
+    h: jax.Array,  # (n_rows,) f32
+    positions: jax.Array,  # (n_rows,) int32 GLOBAL node ids; < 0 = inactive
+    build_nodes: jax.Array,  # (n_build,) int32 global build-node ids, all >= 0
+    n_bins: int,
+) -> jax.Array:
+    """Fused-kernel oracle: ``out[s]`` is the histogram of global node
+    ``build_nodes[s]``; rows at any other node contribute to no bin.
+
+    This is the semantics ground truth for the fused Pallas kernel
+    (`kernels.histogram.build_histogram_nodes`): the window masking and
+    node_map compaction that `build_histogram` expects its caller to do are
+    folded into a row -> build-slot match here, so the build set may be any
+    node-id subset — contiguous level windows, a popped node's two children,
+    or the non-contiguous union of several popped nodes' children.
+    """
+    hit = positions.astype(jnp.int32)[:, None] == build_nodes.astype(jnp.int32)[None, :]
+    slot = jnp.argmax(hit, axis=1).astype(jnp.int32)
+    pos = jnp.where(jnp.any(hit, axis=1), slot, -1)
+    return build_histogram(bins, g, h, pos, build_nodes.shape[0], n_bins)
+
+
 def bin_values(
     x: jax.Array,  # (n_rows, m) f32 raw features
     padded_edges: jax.Array,  # (m, max_bin) f32, +inf padded right edges
