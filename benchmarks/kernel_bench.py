@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row, save_result
+from repro.compress import BitpackCodec
 from repro.core.histcache import HistogramCache
 from repro.core.tree import TreeParams, grow_tree
 from repro.kernels import ops
@@ -138,16 +139,36 @@ def main(quick: bool = False) -> list[str]:
 
     sub_row, sub_payload = _subtraction_rows(quick)
 
+    # page-codec wire: bitpack an n_bins=64 ELLPACK page (the paper's Higgs
+    # alphabet) and time the on-device expansion that replaces the raw put.
+    # wire_ratio is scale-free and nightly-gated (<= 0.8 at 64 bins); the
+    # decode latency is informational only.
+    codec = BitpackCodec()
+    page = np.asarray(rng.integers(0, B, (n, m)), np.uint8)
+    page[0, 0] = B - 1  # pin the alphabet so bits (and the gate) are stable
+    wire, wire_meta = codec.encode(page)
+    wire_ratio = wire.nbytes / page.nbytes
+    wire_dev = jnp.asarray(wire)
+    us_codec = _bench(lambda: codec.device_decode(wire_dev, wire_meta))
+
     save_result("kernel_bench", {
         "histogram_us": us_hist, "bin_values_us": us_bin, "partition_us": us_part,
         "histogram_rows_per_s": rows_per_s, "mxu_arithmetic_intensity": intensity,
         "hist_subtraction": sub_payload,
+        "page_codec": {
+            "codec": codec.name, "n_bins": B, "bits": wire_meta["bits"],
+            "wire_ratio": round(wire_ratio, 4), "device_decode_us": us_codec,
+        },
     })
     return [
         csv_row("kernel_histogram", us_hist, f"rows_per_s={rows_per_s:.0f}"),
         csv_row("kernel_bin_values", us_bin, f"n={n}"),
         csv_row("kernel_partition", us_part, f"n={n}"),
         csv_row("kernel_hist_mxu_intensity", 0.0, f"{intensity:.1f}_flops_per_byte"),
+        csv_row(
+            "kernel_page_codec", us_codec,
+            f"wire_ratio={wire_ratio:.2f}x bits={wire_meta['bits']} n_bins={B}",
+        ),
         sub_row,
     ]
 

@@ -96,6 +96,10 @@ def main(
         extra = f"auc={a:.4f}"
         if stats is not None:
             extra += f" overlap={stats.overlap_ratio:.2f}"
+        if stats is not None and stats.logical_bytes:  # compression ledger
+            results[mode]["wire_ratio"] = round(stats.wire_ratio, 3)
+            if stats.wire_bytes != stats.logical_bytes:
+                extra += f" wire_ratio={stats.wire_ratio:.2f}"
         if stats is not None and stats.hist_spills:  # tiered-store ledger
             results[mode]["hist_spills"] = stats.hist_spills
             results[mode]["hist_spill_mib"] = round(stats.hist_spill_bytes / 2**20, 2)
@@ -128,14 +132,15 @@ def main(
         ),
     )
 
-    def ooc(f: float | None, hist_subtraction: bool = True):
+    def ooc(f: float | None, hist_subtraction: bool = True, page_codec: str = "raw"):
         stats = TransferStats()
         cfg = SamplingConfig(method="mvs", f=f) if f else SamplingConfig()
         dm = IterDMatrix(
             train_src, max_bin=MAX_BIN, page_bytes=PAGE_BYTES, stats=stats
         )
         b = GradientBooster(
-            _params(cfg, hist_subtraction), policy=ExecutionPolicy(mode="out_of_core")
+            _params(cfg, hist_subtraction),
+            policy=ExecutionPolicy(mode="out_of_core", page_codec=page_codec),
         )
         b.fit(dm)
         return b, stats
@@ -167,6 +172,10 @@ def main(
 
     record("gpu_out_of_core_f1.0", lambda: ooc(None))
     record("gpu_out_of_core_f1.0_fullbuild", lambda: ooc(None, hist_subtraction=False))
+    # page compression (repro.compress): bitpack stages 64-bin pages at 6
+    # bits/symbol, so wire_ratio reads 0.75 while the forest — and therefore
+    # the AUC — is bit-for-bit the raw row's (delta row below)
+    record("gpu_out_of_core_f1.0_bitpack", lambda: ooc(None, page_codec="bitpack"))
     for f in ([0.3] if quick else [0.5, 0.3, 0.1]):
         record(f"gpu_out_of_core_f{f}", lambda f=f: ooc(f))
 
@@ -212,6 +221,26 @@ def main(
     }
     out_rows.append(
         csv_row("table2_hist_subtraction_auc_delta", 0.0, f"auc_delta={auc_delta:.6f}")
+    )
+
+    # compression is lossless end to end: the bitpack streaming run grows the
+    # exact raw-streaming forest (auc_delta=0.000000) while moving fewer
+    # PCIe bytes (wire_ratio in its row above)
+    codec_delta = abs(
+        raw_auc["gpu_out_of_core_f1.0"] - raw_auc["gpu_out_of_core_f1.0_bitpack"]
+    )
+    results["page_codec"] = {
+        "codec": "bitpack",
+        "wire_ratio": results["gpu_out_of_core_f1.0_bitpack"].get("wire_ratio"),
+        "auc_delta_vs_raw": round(codec_delta, 6),
+        "lossless": bool(codec_delta == 0.0),
+    }
+    out_rows.append(
+        csv_row(
+            "table2_page_codec_auc_delta", 0.0,
+            f"auc_delta={codec_delta:.6f} "
+            f"wire_ratio={results['page_codec']['wire_ratio']}",
+        )
     )
 
     # auto-selected vs explicitly-forced mode must be the SAME model exactly:

@@ -1,0 +1,43 @@
+"""repro.compress -- lossless page codecs + quantized gradient transport.
+
+Shrinks every PCIe/host byte the out-of-core pipeline moves: ELLPACK bin
+pages pack to ``ceil(log2(n_bins))`` bits (``"bitpack"``), sorted/sparse
+pages delta+RLE code on disk (``"delta-rle"``), paged-forest chunks pack
+node fields to 14 bytes (``ForestPageTransport``), and gradient
+histograms spill / all-reduce in f16/bf16/int8 (``GradQuantizer``).
+Defaults (``"raw"`` everywhere) are bit-for-bit the uncompressed paths.
+"""
+
+from .codecs import (
+    BitpackCodec,
+    CodecChain,
+    DeltaRLECodec,
+    ForestPageTransport,
+    PageCodec,
+    PageTransport,
+    RawCodec,
+    available_codecs,
+    get_codec,
+    make_transport,
+    model_bits,
+    register_codec,
+)
+from .grad import GRAD_TRANSPORTS, PSUM_TRANSPORTS, GradQuantizer
+
+__all__ = [
+    "PageCodec",
+    "RawCodec",
+    "BitpackCodec",
+    "DeltaRLECodec",
+    "CodecChain",
+    "register_codec",
+    "get_codec",
+    "available_codecs",
+    "PageTransport",
+    "ForestPageTransport",
+    "make_transport",
+    "model_bits",
+    "GradQuantizer",
+    "GRAD_TRANSPORTS",
+    "PSUM_TRANSPORTS",
+]

@@ -1,0 +1,406 @@
+"""Lossless page codecs for ELLPACK bin pages and packed forest chunks.
+
+Every byte that crosses disk -> host -> device multiplies through the
+out-of-core training loop, because the page pipeline is transfer-bound
+(the paper's Fig. 4 overlap argument).  This module provides the codec
+layer that shrinks those bytes without changing a single bin symbol:
+
+- ``RawCodec``      -- identity passthrough; the default, bit-for-bit
+                       today's behaviour.
+- ``BitpackCodec``  -- packs uint8 bin symbols to the minimal bit width
+                       (``ceil(log2(n_symbols))`` per page, adaptively),
+                       the XGBoost ELLPACK trick (arxiv 1806.11248).
+                       Device-decodable: the packed bytes cross PCIe and
+                       are expanded back to int32 bins with jnp ops.
+- ``DeltaRLECodec`` -- mod-256 delta + run-length coding for sorted or
+                       sparse pages.  Host-only (decode happens before
+                       staging); its win is disk bytes, not PCIe bytes.
+- ``CodecChain``    -- composition, e.g. ``"bitpack+delta-rle"``.
+
+Codecs are looked up by name via :func:`get_codec`; pages written by
+:class:`repro.data.pages.PageStore` record the codec name per page in the
+manifest so legacy (pre-codec) caches still reopen and decode as raw.
+
+All codecs here are lossless: ``decode(encode(arr)) == arr`` exactly,
+for any uint8 array including the MISSING_BIN (255) sentinel.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+__all__ = [
+    "PageCodec",
+    "RawCodec",
+    "BitpackCodec",
+    "DeltaRLECodec",
+    "CodecChain",
+    "register_codec",
+    "get_codec",
+    "available_codecs",
+    "PageTransport",
+    "ForestPageTransport",
+    "make_transport",
+    "model_bits",
+]
+
+Meta = Dict[str, object]
+
+
+class PageCodec:
+    """A lossless transform on a uint8 page payload.
+
+    ``encode`` returns ``(payload, meta)`` where ``payload`` is a numpy
+    array (what hits disk / the wire) and ``meta`` is a small JSON-
+    serializable dict recorded in the page manifest.  ``decode`` inverts
+    it exactly.  Codecs with ``device_decodable=True`` additionally
+    implement :meth:`device_decode`, which expands the *staged* payload
+    on-device with jnp ops -- those codecs shrink PCIe bytes, not just
+    disk bytes.
+    """
+
+    name: str = "abstract"
+    device_decodable: bool = False
+
+    def encode(self, arr: np.ndarray) -> Tuple[np.ndarray, Meta]:
+        raise NotImplementedError
+
+    def decode(self, payload: np.ndarray, meta: Meta) -> np.ndarray:
+        raise NotImplementedError
+
+    def device_decode(self, dev, meta: Meta):
+        raise NotImplementedError(f"codec {self.name!r} is not device-decodable")
+
+
+class RawCodec(PageCodec):
+    """Identity codec: today's uncompressed behaviour, bit for bit."""
+
+    name = "raw"
+
+    def encode(self, arr: np.ndarray) -> Tuple[np.ndarray, Meta]:
+        return arr, {}
+
+    def decode(self, payload: np.ndarray, meta: Meta) -> np.ndarray:
+        return payload
+
+
+class BitpackCodec(PageCodec):
+    """Pack uint8 symbols to the minimal per-page bit width.
+
+    The bit width adapts to the symbols actually present: MISSING_BIN
+    (255) is remapped to ``max_real_symbol + 1`` before packing, so a
+    64-bin page with no missing values packs at 6 bits/symbol (0.75x)
+    instead of the 8 bits a fixed-255 alphabet would force.  Packing is
+    row-wise (each row padded to whole bytes independently) so a packed
+    page can still be row-sharded across devices.
+    """
+
+    name = "bitpack"
+    device_decodable = True
+    _MISSING = 255
+
+    def encode(self, arr: np.ndarray) -> Tuple[np.ndarray, Meta]:
+        arr = np.ascontiguousarray(arr, dtype=np.uint8)
+        shape = list(arr.shape)
+        if arr.ndim >= 2:
+            a2 = arr.reshape(shape[0], int(np.prod(shape[1:])))
+        else:
+            a2 = arr.reshape(1, arr.size)
+        missing_mask = a2 == self._MISSING
+        has_missing = bool(missing_mask.any())
+        real = np.where(missing_mask, 0, a2)
+        max_real = int(real.max(initial=0))
+        missing_sym: Optional[int] = None
+        if has_missing:
+            missing_sym = max_real + 1
+            a2 = np.where(missing_mask, np.uint8(missing_sym), a2)
+        max_sym = missing_sym if has_missing else max_real
+        bits = max(1, int(max_sym).bit_length())
+        meta: Meta = {"shape": shape, "bits": bits, "missing": missing_sym}
+        if a2.size == 0:
+            return np.zeros((a2.shape[0], 0), dtype=np.uint8), meta
+        # (rows, syms, 8) bit planes, keep the low `bits`, pack back to bytes
+        planes = np.unpackbits(a2[..., None], axis=-1, bitorder="little")[..., :bits]
+        payload = np.packbits(
+            planes.reshape(a2.shape[0], a2.shape[1] * bits), axis=-1, bitorder="little"
+        )
+        return np.ascontiguousarray(payload), meta
+
+    def decode(self, payload: np.ndarray, meta: Meta) -> np.ndarray:
+        shape = [int(s) for s in meta["shape"]]
+        bits = int(meta["bits"])
+        missing = meta.get("missing")
+        rows = shape[0] if len(shape) >= 2 else 1
+        row_syms = int(np.prod(shape[1:])) if len(shape) >= 2 else int(shape[0])
+        if rows * row_syms == 0:
+            return np.zeros(shape, dtype=np.uint8)
+        payload = np.ascontiguousarray(payload, dtype=np.uint8).reshape(rows, -1)
+        planes = np.unpackbits(payload, axis=-1, bitorder="little")[:, : row_syms * bits]
+        planes = planes.reshape(rows, row_syms, bits)
+        weights = (1 << np.arange(bits, dtype=np.uint16))
+        syms = (planes.astype(np.uint16) * weights).sum(axis=-1).astype(np.uint8)
+        if missing is not None:
+            syms = np.where(syms == np.uint8(int(missing)), np.uint8(self._MISSING), syms)
+        return syms.reshape(shape)
+
+    def device_decode(self, dev, meta: Meta):
+        """Expand a staged packed payload to int32 bins with jnp ops.
+
+        Works whether the staged array is uint8 or was upcast to int32 by
+        the staging ``put`` (shift/mask are value-preserving on both).
+        """
+        import jax.numpy as jnp
+
+        shape = [int(s) for s in meta["shape"]]
+        bits = int(meta["bits"])
+        missing = meta.get("missing")
+        rows = shape[0] if len(shape) >= 2 else 1
+        row_syms = int(np.prod(shape[1:])) if len(shape) >= 2 else int(shape[0])
+        dev = dev.reshape(rows, -1)
+        # bit j of symbol s lives in byte (s*bits + j) >> 3 at offset & 7
+        bit_pos = np.arange(row_syms, dtype=np.int64)[:, None] * bits + np.arange(bits)
+        byte_idx = jnp.asarray(bit_pos >> 3)
+        shift = jnp.asarray((bit_pos & 7).astype(np.int32))
+        planes = (dev[:, byte_idx].astype(jnp.int32) >> shift) & 1
+        weights = jnp.asarray((1 << np.arange(bits)).astype(np.int32))
+        syms = (planes * weights).sum(axis=-1)
+        if missing is not None:
+            syms = jnp.where(syms == int(missing), self._MISSING, syms)
+        return syms.reshape(shape).astype(jnp.int32)
+
+
+class DeltaRLECodec(PageCodec):
+    """Mod-256 delta + run-length coding for sorted / sparse pages.
+
+    The flat C-order symbol stream is delta-coded (first symbol kept,
+    then successive differences mod 256) and run-length encoded as
+    interleaved ``(value, run_length<=255)`` uint8 pairs; runs longer
+    than 255 split.  Sorted pages delta to long zero runs; sparse pages
+    (mostly one symbol) RLE directly.  Host-only: its win is disk bytes.
+    """
+
+    name = "delta-rle"
+
+    def encode(self, arr: np.ndarray) -> Tuple[np.ndarray, Meta]:
+        arr = np.ascontiguousarray(arr, dtype=np.uint8)
+        shape = list(arr.shape)
+        flat = arr.reshape(-1)
+        if flat.size == 0:
+            return np.zeros(0, dtype=np.uint8), {"shape": shape}
+        delta = np.empty_like(flat)
+        delta[0] = flat[0]
+        np.subtract(flat[1:], flat[:-1], out=delta[1:])  # uint8 wraps mod 256
+        # run-length encode the delta stream
+        change = np.flatnonzero(delta[1:] != delta[:-1]) + 1
+        starts = np.concatenate(([0], change))
+        lengths = np.diff(np.concatenate((starts, [delta.size])))
+        values = delta[starts]
+        # split runs longer than 255
+        reps = ((lengths + 254) // 255).astype(np.int64)
+        out_vals = np.repeat(values, reps)
+        out_lens = np.full(int(reps.sum()), 255, dtype=np.uint8)
+        last = np.cumsum(reps) - 1
+        out_lens[last] = (lengths - (reps - 1) * 255).astype(np.uint8)
+        payload = np.empty(out_vals.size * 2, dtype=np.uint8)
+        payload[0::2] = out_vals
+        payload[1::2] = out_lens
+        return payload, {"shape": shape}
+
+    def decode(self, payload: np.ndarray, meta: Meta) -> np.ndarray:
+        shape = [int(s) for s in meta["shape"]]
+        payload = np.ascontiguousarray(payload, dtype=np.uint8)
+        if payload.size == 0:
+            return np.zeros(shape, dtype=np.uint8)
+        values = payload[0::2]
+        lengths = payload[1::2].astype(np.int64)
+        delta = np.repeat(values, lengths)
+        # cumsum in uint64 then truncate back to uint8 == mod-256 prefix sum
+        flat = np.cumsum(delta, dtype=np.uint64).astype(np.uint8)
+        return flat.reshape(shape)
+
+
+class CodecChain(PageCodec):
+    """Apply codecs in sequence, e.g. ``bitpack`` then ``delta-rle``."""
+
+    device_decodable = False
+
+    def __init__(self, codecs: Sequence[PageCodec]):
+        if not codecs:
+            raise ValueError("CodecChain needs at least one codec")
+        self.codecs = list(codecs)
+        self.name = "+".join(c.name for c in self.codecs)
+
+    def encode(self, arr: np.ndarray) -> Tuple[np.ndarray, Meta]:
+        payload = arr
+        steps: List[Meta] = []
+        for codec in self.codecs:
+            payload, meta = codec.encode(payload)
+            steps.append(meta)
+        return payload, {"steps": steps}
+
+    def decode(self, payload: np.ndarray, meta: Meta) -> np.ndarray:
+        steps = meta["steps"]
+        for codec, step in zip(reversed(self.codecs), reversed(list(steps))):
+            payload = codec.decode(payload, step)
+        return payload
+
+
+_REGISTRY: Dict[str, PageCodec] = {}
+
+
+def register_codec(codec: PageCodec) -> PageCodec:
+    """Register a codec instance under its ``name`` for lookup by string."""
+    _REGISTRY[codec.name] = codec
+    return codec
+
+
+register_codec(RawCodec())
+register_codec(BitpackCodec())
+register_codec(DeltaRLECodec())
+
+
+def available_codecs() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def get_codec(codec: Union[str, PageCodec, None]) -> PageCodec:
+    """Resolve a codec name (``"raw"``, ``"bitpack"``, ``"a+b"`` chains,
+    or an already-constructed :class:`PageCodec`) to a codec instance."""
+    if codec is None:
+        return _REGISTRY["raw"]
+    if isinstance(codec, PageCodec):
+        return codec
+    name = str(codec)
+    if name in _REGISTRY:
+        return _REGISTRY[name]
+    if "+" in name:
+        return CodecChain([get_codec(part) for part in name.split("+")])
+    raise ValueError(
+        f"unknown page codec {name!r}; available: {', '.join(available_codecs())}"
+        " (compose with '+', e.g. 'bitpack+delta-rle')"
+    )
+
+
+class PageTransport:
+    """Host->device transport for a device-decodable codec.
+
+    ``encode`` runs on host and returns the wire payload plus meta;
+    ``decode`` runs after staging and expands the device copy of the
+    wire payload back to int32 bins.  Only the wire payload crosses
+    PCIe, which is the whole point.
+    """
+
+    def __init__(self, codec: PageCodec):
+        if not codec.device_decodable:
+            raise ValueError(f"codec {codec.name!r} cannot decode on device")
+        self.codec = codec
+        self.name = codec.name
+
+    def encode(self, arr: np.ndarray) -> Tuple[np.ndarray, Meta]:
+        return self.codec.encode(arr)
+
+    def decode(self, dev, meta: Meta):
+        return self.codec.device_decode(dev, meta)
+
+
+def make_transport(codec: Union[str, PageCodec, None]) -> Optional[PageTransport]:
+    """Return a :class:`PageTransport` for the staging path, or ``None``.
+
+    ``None``/``"raw"`` and host-only codecs (delta-rle, chains) return
+    ``None``: pages then stage exactly as today.  Host-only codecs still
+    shrink disk bytes via :class:`repro.data.pages.PageStore`; only
+    device-decodable codecs shrink PCIe bytes too.
+    """
+    if codec is None:
+        return None
+    resolved = get_codec(codec)
+    if not resolved.device_decodable:
+        return None
+    return PageTransport(resolved)
+
+
+def model_bits(codec: Union[str, PageCodec, None], n_bins: int) -> int:
+    """Device-wire bits per bin symbol for the memory model.
+
+    The model plans capacity before seeing data, so it uses the worst
+    case for the configured alphabet: ``ceil(log2(n_bins + 1))`` (the
+    ``+1`` reserves the missing symbol).  Codecs that do not stage a
+    device transport (raw, host-only codecs, chains) leave wire bytes
+    unchanged and model at 8 bits.
+    """
+    if make_transport(codec) is None:
+        return 8
+    return max(1, int(max(1, int(n_bins))).bit_length())
+
+
+class ForestPageTransport:
+    """Wire packing for paged-forest chunks served out of core.
+
+    A packed forest page is a ``(6, n_trees, n_nodes)`` f32 stack of the
+    per-node fields; on the wire each node costs 24 bytes.  Tree node
+    ids (feature, split_bin) fit int16 and the two flags fit uint8, so
+    the wire layout [feature i16 | split_bin i16 | split_value f32 |
+    default_left u8 | is_leaf u8 | leaf_value f32] is 14 bytes/node
+    (0.583x) and decodes on-device with bitcasts -- losslessly, since
+    the f32 planes cross verbatim and the int planes are exact.
+    """
+
+    name = "forest-pack"
+
+    def encode(self, page: np.ndarray) -> Tuple[np.ndarray, Meta]:
+        page = np.ascontiguousarray(page, dtype=np.float32)
+        _, n_trees, n_nodes = page.shape
+        feature, split_bin, split_value, default_left, is_leaf, leaf_value = page
+        if max(np.abs(feature).max(initial=0), np.abs(split_bin).max(initial=0)) >= 32767:
+            wire = np.frombuffer(page.tobytes(), dtype=np.uint8).copy()
+            return wire, {"mode": "raw", "shape": [6, int(n_trees), int(n_nodes)]}
+        wire = np.frombuffer(
+            b"".join(
+                (
+                    feature.astype("<i2").tobytes(),
+                    split_bin.astype("<i2").tobytes(),
+                    split_value.astype("<f4").tobytes(),
+                    (default_left > 0.5).astype(np.uint8).tobytes(),
+                    (is_leaf > 0.5).astype(np.uint8).tobytes(),
+                    leaf_value.astype("<f4").tobytes(),
+                )
+            ),
+            dtype=np.uint8,
+        ).copy()
+        return wire, {"mode": "packed", "shape": [6, int(n_trees), int(n_nodes)]}
+
+    def decode(self, dev, meta: Meta) -> Dict[str, object]:
+        import jax.numpy as jnp
+        from jax import lax
+
+        _, n_trees, n_nodes = (int(s) for s in meta["shape"])
+        n = n_trees * n_nodes
+        if meta["mode"] == "raw":
+            page = lax.bitcast_convert_type(
+                dev.reshape(6, n_trees, n_nodes, 4), jnp.float32
+            )
+            from ..serve.forest import PackedForest
+
+            return PackedForest.unpack_page(page)
+        offsets = np.cumsum([0, 2 * n, 2 * n, 4 * n, n, n, 4 * n])
+
+        def seg(i, width):
+            raw = dev[offsets[i] : offsets[i + 1]]
+            return raw.reshape(n_trees, n_nodes, width) if width > 1 else raw.reshape(n_trees, n_nodes)
+
+        feature = lax.bitcast_convert_type(seg(0, 2), jnp.int16).astype(jnp.int32)
+        split_bin = lax.bitcast_convert_type(seg(1, 2), jnp.int16).astype(jnp.int32)
+        split_value = lax.bitcast_convert_type(seg(2, 4), jnp.float32)
+        default_left = seg(3, 1) > 0
+        is_leaf = seg(4, 1) > 0
+        leaf_value = lax.bitcast_convert_type(seg(5, 4), jnp.float32)
+        return {
+            "feature": feature,
+            "split_bin": split_bin,
+            "split_value": split_value,
+            "default_left": default_left,
+            "is_leaf": is_leaf,
+            "leaf_value": leaf_value,
+        }

@@ -1,0 +1,109 @@
+"""Quantized transport for gradient pairs and histograms.
+
+GBDT tolerates aggressive gradient/histogram quantization (arxiv
+2011.02022): the split decision depends on *sums* of gradient pairs, so
+narrowing individual pairs on the wire costs little accuracy while
+halving (f16/bf16) or quartering (int8) spill and all-reduce bytes.
+
+The quantizer is a *transport*: payloads are always dequantized back to
+f32 **before** any accumulation, so the f32 reconstruction order of the
+training loop is unchanged -- ``"raw"`` mode is byte-for-byte today's
+behaviour, and lossy modes change only the values, never the order of
+operations.
+
+Two call sites use it:
+
+- :class:`repro.core.histcache.HistogramStore` spill/fetch -- any mode,
+  including ``"int8"`` (per-array absmax scale, computed on device).
+- the distributed histogram psum in ``repro.distributed.gbdt_shard`` --
+  ``"f16"``/``"bf16"`` only: an int8 psum would overflow after a few
+  shards, so :meth:`GradQuantizer.psum_cast` rejects it and points the
+  caller at the spill transport instead.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple, Union
+
+__all__ = ["GradQuantizer", "GRAD_TRANSPORTS", "PSUM_TRANSPORTS"]
+
+GRAD_TRANSPORTS = ("raw", "f16", "bf16", "int8")
+PSUM_TRANSPORTS = ("raw", "f16", "bf16")
+
+
+@dataclasses.dataclass(frozen=True)
+class GradQuantizer:
+    """f32 -> {f32, f16, bf16, int8-with-scale} wire transport."""
+
+    mode: str = "raw"
+
+    def __post_init__(self):
+        if self.mode not in GRAD_TRANSPORTS:
+            raise ValueError(
+                f"unknown grad transport {self.mode!r}; "
+                f"choose one of {', '.join(GRAD_TRANSPORTS)}"
+            )
+
+    @classmethod
+    def resolve(cls, mode: Union[str, "GradQuantizer", None]) -> "GradQuantizer":
+        if isinstance(mode, GradQuantizer):
+            return mode
+        return cls("raw" if mode is None else str(mode))
+
+    @property
+    def is_raw(self) -> bool:
+        return self.mode == "raw"
+
+    def _wire_dtype(self):
+        import jax.numpy as jnp
+
+        return {"f16": jnp.float16, "bf16": jnp.bfloat16, "int8": jnp.int8}[self.mode]
+
+    def quantize(self, arr) -> Tuple[object, Optional[object]]:
+        """Narrow a device f32 array to the wire dtype.
+
+        Returns ``(payload, scale)``; ``scale`` is a device f32 scalar
+        for ``"int8"`` (absmax / 127) and ``None`` otherwise.  Runs on
+        device so only the narrowed payload crosses to host.
+        """
+        import jax.numpy as jnp
+
+        if self.is_raw:
+            return arr, None
+        if self.mode == "int8":
+            scale = jnp.maximum(jnp.max(jnp.abs(arr)), 1e-12) / 127.0
+            payload = jnp.clip(jnp.round(arr / scale), -127, 127).astype(jnp.int8)
+            return payload, scale
+        return arr.astype(self._wire_dtype()), None
+
+    def dequantize(self, payload, scale=None):
+        """Expand a wire payload back to f32 (before any accumulation)."""
+        import jax.numpy as jnp
+
+        if self.is_raw:
+            return payload
+        if self.mode == "int8":
+            return payload.astype(jnp.float32) * scale
+        return payload.astype(jnp.float32)
+
+    def psum_cast(self, hist):
+        """Narrow a histogram for the cross-shard psum."""
+        if self.mode not in PSUM_TRANSPORTS:
+            raise ValueError(
+                f"grad transport {self.mode!r} cannot back a psum: int8 partial "
+                "sums overflow across shards; use it for HistogramStore "
+                "spill/fetch (ExecutionPolicy(grad_transport='int8')) and pick "
+                "'f16' or 'bf16' for DistConfig(grad_transport=...)"
+            )
+        if self.is_raw:
+            return hist
+        return hist.astype(self._wire_dtype())
+
+    def psum_restore(self, hist):
+        """Widen a psum result back to f32."""
+        import jax.numpy as jnp
+
+        if self.is_raw:
+            return hist
+        return hist.astype(jnp.float32)

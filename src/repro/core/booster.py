@@ -215,6 +215,7 @@ class GradientBooster:
             retained_levels=self.policy.hist_retained_levels,
             transfer_stats=transfer_stats,
             retry=self.policy.retry,
+            grad_transport=self.policy.grad_transport,
         )
 
     # ---------------------------------------------------------- sklearn compat
@@ -328,7 +329,7 @@ class GradientBooster:
         labels = dm.require_labels()
         n_bins = dm.n_bins
         bin_valid = bin_valid_from_cuts(dm.cuts, n_bins)
-        bins = jnp.asarray(dm.single_page_bins().astype(np.int32))
+        bins = self._stage_in_core(dm.single_page_bins())
         labels_j = jnp.asarray(labels)
 
         if start_iteration == 0:
@@ -399,6 +400,28 @@ class GradientBooster:
         self.best_iteration_ = best_iter if best_iter >= 0 else len(self.trees) - 1
         return self
 
+    def _stage_in_core(self, host_bins: np.ndarray):
+        """Stage the whole quantized matrix, through the policy's page codec
+        when it is device-decodable (only the packed wire payload crosses;
+        the decoded int32 bins are identical either way)."""
+        from repro.compress import make_transport
+
+        transport = make_transport(self.policy.page_codec)
+        if transport is None:
+            bins = jnp.asarray(host_bins.astype(np.int32))
+            if self.stats is not None:
+                self.stats.logical_bytes += host_bins.nbytes
+                self.stats.wire_bytes += host_bins.nbytes
+                self.stats.host_to_device_bytes += host_bins.nbytes
+            return bins
+        wire, wire_meta = transport.encode(np.ascontiguousarray(host_bins))
+        bins = transport.decode(jnp.asarray(wire), wire_meta)
+        if self.stats is not None:
+            self.stats.logical_bytes += host_bins.nbytes
+            self.stats.wire_bytes += wire.nbytes
+            self.stats.host_to_device_bytes += wire.nbytes
+        return bins
+
     # ----------------------------------------------------- external engines
     def _stream(self, indices=None, staging_depth: int | None = None):
         """One `PageStream` pass over the last external fit's page set."""
@@ -408,6 +431,7 @@ class GradientBooster:
             cache=self._device_cache,
             indices=indices,
             retry=self.policy.retry,
+            codec=self.policy.page_codec,
         )
 
     def _fit_external(
@@ -542,7 +566,7 @@ class GradientBooster:
         from repro.core.ellpack import EllpackPage
 
         staged = EllpackPage(bins_np, 0)
-        bins_c = self.pages.stage(staged)
+        bins_c = self.pages.stage(staged, codec=self.policy.page_codec)
         res = grow_tree(
             bins_c, jnp.asarray(g_np), jnp.asarray(h_np), n_bins, bin_valid, tp,
             cut_values=cuts.values, cut_ptrs=cuts.ptrs,
@@ -621,7 +645,9 @@ class GradientBooster:
         if hasattr(X, "page_set"):  # DMatrix: the streaming serving path
             from repro.serve.engine import predict_margin_dmatrix
 
-            return predict_margin_dmatrix(forest, X, impl=impl)
+            return predict_margin_dmatrix(
+                forest, X, impl=impl, page_codec=self.policy.page_codec
+            )
         bins = jnp.asarray(bin_batch(np.asarray(X), self.cuts).astype(np.int32))
         return np.asarray(forest.predict_margin_bins(bins, impl=impl))
 

@@ -294,6 +294,12 @@ class HistogramStore:
         growth.
     transfer_stats : `TransferStats` sink for spill/fetch bytes (shares the
         page-traffic ledger when the caller passes the page set's stats).
+    grad_transport : wire transport for the spill/fetch round trip
+        (`repro.compress.GradQuantizer`): "raw" keeps today's f32 path bit
+        for bit; "f16"/"bf16" halve and "int8" (per-array absmax scale)
+        quarters the bytes each spilled histogram moves. Payloads are
+        dequantized to f32 at fetch, before any accumulation, so only the
+        stored values narrow — never the reconstruction order.
     """
 
     def __init__(
@@ -303,7 +309,10 @@ class HistogramStore:
         retained_levels: int = 1,
         transfer_stats: TransferStats | None = None,
         retry: "RetryPolicy | None" = None,
+        grad_transport: str = "raw",
     ):
+        from repro.compress import GradQuantizer
+
         if budget_bytes is not None and budget_bytes < 0:
             raise ValueError(f"budget_bytes must be >= 0 or None, got {budget_bytes}")
         if retained_levels < 1:
@@ -313,6 +322,7 @@ class HistogramStore:
         self.retained_levels = retained_levels
         self.transfer_stats = transfer_stats if transfer_stats is not None else TransferStats()
         self.retry = retry if retry is not None else RetryPolicy()
+        self.quantizer = GradQuantizer.resolve(grad_transport)
         self.stats = HistCacheStats()
         self._device: dict[tuple, Array] = {}
         # host tier. A key whose copy is still in flight maps to None here
@@ -326,6 +336,8 @@ class HistogramStore:
         self._inflight: dict[tuple, Array] = {}
         self.max_inflight_spills = 2
         self._nbytes: dict[tuple, int] = {}
+        # int8 transport: per-key dequantization scale (device f32 scalar)
+        self._qscale: dict[tuple, Array | None] = {}
         self._kind: dict[tuple, str] = {}  # "level" | "node" | "ancestor"
         self._priority: dict[tuple, float] = {}  # lower = colder = spills first
         self._stamp: dict[tuple, int] = {}  # insertion order tiebreak
@@ -342,6 +354,7 @@ class HistogramStore:
         self._host.clear()
         self._inflight.clear()
         self._nbytes.clear()
+        self._qscale.clear()
         self._kind.clear()
         self._priority.clear()
         self._stamp.clear()
@@ -383,6 +396,7 @@ class HistogramStore:
         self._inflight.pop(key, None)
         self._host.pop(key, None)
         self._nbytes.pop(key, None)
+        self._qscale.pop(key, None)
         self._kind.pop(key, None)
         self._priority.pop(key, None)
         self._stamp.pop(key, None)
@@ -403,6 +417,9 @@ class HistogramStore:
         ``overlap_ratio``.
         """
         arr = self._device.pop(key)
+        if not self.quantizer.is_raw:
+            # narrow on device: only the wire payload crosses to the host
+            arr, self._qscale[key] = self.quantizer.quantize(arr)
         try:
             arr.copy_to_host_async()
         except AttributeError:  # non-committed/np-backed arrays: copy is free
@@ -410,11 +427,11 @@ class HistogramStore:
         self._inflight[key] = arr
         self._host[key] = None  # placeholder: logically host-tier as of now
         self._dev_bytes -= self._nbytes[key]
-        nbytes = self._nbytes[key]
+        wire_nbytes = int(arr.nbytes)  # == _nbytes under the raw transport
         ts = self.transfer_stats
         ts.hist_spills += 1
-        ts.hist_spill_bytes += nbytes
-        ts.device_to_host_bytes += nbytes
+        ts.hist_spill_bytes += wire_nbytes
+        ts.device_to_host_bytes += wire_nbytes
         while len(self._inflight) > self.max_inflight_spills:
             self._complete_spill(next(iter(self._inflight)))
 
@@ -460,6 +477,10 @@ class HistogramStore:
         device = self.retry.call(
             _stage, stats=self.transfer_stats, describe="histogram fetch"
         )
+        if not self.quantizer.is_raw:
+            # widen back to f32 *before* any accumulation reads it, so the
+            # reconstruction order matches the raw transport exactly
+            device = self.quantizer.dequantize(device, self._qscale.pop(key, None))
         del self._host[key]
         self._device[key] = device
         self._dev_bytes += self._nbytes[key]
@@ -467,6 +488,8 @@ class HistogramStore:
         ts.hist_fetches += 1
         ts.hist_fetch_bytes += host.nbytes
         ts.host_to_device_bytes += host.nbytes
+        ts.logical_bytes += self._nbytes[key]
+        ts.wire_bytes += host.nbytes
         return device
 
     def _coldest(self, keys: list[tuple]) -> tuple:

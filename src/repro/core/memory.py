@@ -42,6 +42,12 @@ class DeviceMemoryModel:
     hist_budget_bytes: int | None = None
     # lossguide leaf budget; 0 = depthwise (whole-level histograms)
     max_leaves: int = 0
+    # bits per ELLPACK bin symbol on the wire / resident (repro.compress):
+    # 8 = raw uint8 pages, ceil(log2(n_bins+1)) when a device-decodable
+    # page codec ("bitpack") keeps the matrix packed — see
+    # repro.compress.model_bits. Wire bytes != logical bytes moves both the
+    # mode-selection procedure and Table 1's max rows.
+    page_codec_bits: int = 8
 
     @property
     def hist_node_bytes(self) -> int:
@@ -95,8 +101,19 @@ class DeviceMemoryModel:
         cuts = self.num_features * self.max_bin * 4
         return self.hist_bytes + cuts
 
+    def matrix_device_bytes(self, logical_bytes: int) -> int:
+        """Device/wire bytes of ``logical_bytes`` of uint8 bin symbols under
+        the configured codec (identity at the default 8 bits/symbol)."""
+        return (logical_bytes * self.page_codec_bits + 7) // 8
+
     def ellpack_bytes(self, n_rows: int) -> int:
-        return n_rows * self.num_features  # uint8 bins
+        # uint8 bins, packed to page_codec_bits per symbol on device
+        return self.matrix_device_bytes(n_rows * self.num_features)
+
+    @property
+    def page_wire_bytes(self) -> int:
+        """One streamed page's device/PCIe footprint (packed under the codec)."""
+        return self.matrix_device_bytes(self.page_bytes)
 
     def in_core_bytes(self, n_rows: int) -> int:
         return self.fixed_bytes + self.ellpack_bytes(n_rows) + n_rows * (
@@ -106,7 +123,7 @@ class DeviceMemoryModel:
     def out_of_core_bytes(self, n_rows: int) -> int:
         return (
             self.fixed_bytes
-            + 2 * self.page_bytes  # double-buffered page streaming
+            + 2 * self.page_wire_bytes  # double-buffered page streaming
             + n_rows * self.row_state_bytes
         )
 
@@ -114,7 +131,7 @@ class DeviceMemoryModel:
         kept = int(n_rows * f)
         return (
             self.fixed_bytes
-            + 2 * self.page_bytes
+            + 2 * self.page_wire_bytes
             + self.ellpack_bytes(kept)  # compacted page (Alg. 7)
             + kept * self.row_state_bytes
         )
@@ -152,16 +169,19 @@ class DeviceMemoryModel:
         return max(0, budget // per_tree)
 
     # ----- closed-form max rows per mode (Table 1) -----
+    # integer bit math (x8) keeps the closed forms exact for fractional
+    # per-row matrix bytes; at the default 8 bits/symbol every formula
+    # reduces to the pre-codec integer result
     def max_rows_in_core(self) -> int:
-        per_row = self.num_features + self.row_state_bytes + 8
-        return max(0, (self.hbm_bytes - self.fixed_bytes) // per_row)
+        per_row_bits = self.num_features * self.page_codec_bits + (self.row_state_bytes + 8) * 8
+        return max(0, (self.hbm_bytes - self.fixed_bytes) * 8 // per_row_bits)
 
     def max_rows_out_of_core(self) -> int:
         per_row = self.row_state_bytes
-        budget = self.hbm_bytes - self.fixed_bytes - 2 * self.page_bytes
+        budget = self.hbm_bytes - self.fixed_bytes - 2 * self.page_wire_bytes
         return max(0, budget // per_row)
 
     def max_rows_sampled(self, f: float) -> int:
-        per_row = f * (self.num_features + self.row_state_bytes)
-        budget = self.hbm_bytes - self.fixed_bytes - 2 * self.page_bytes
-        return max(0, int(budget / per_row))
+        per_row_bits = f * (self.num_features * self.page_codec_bits + self.row_state_bytes * 8)
+        budget = self.hbm_bytes - self.fixed_bytes - 2 * self.page_wire_bytes
+        return max(0, int(budget * 8 / per_row_bits))

@@ -94,6 +94,17 @@ class ExecutionPolicy:
     # checkpoint cadence for external-mode training (None = no checkpoints)
     checkpoint_every: int | None = None
     checkpoint_dir: str | None = None
+    # lossless page codec for every host->device staging path
+    # (repro.compress): "raw" = today's uint8 pages bit-for-bit; "bitpack"
+    # stages ceil(log2(n_symbols))-bit packed payloads and expands on
+    # device, shrinking PCIe bytes and the byte model's matrix/page terms.
+    # The trained forest is identical either way (the codec is lossless).
+    page_codec: str = "raw"
+    # wire transport for HistogramStore spill/fetch (repro.compress
+    # GradQuantizer): "raw" (f32, bit-for-bit), "f16"/"bf16" (half the
+    # spill bytes), or "int8" (per-array absmax scale, quarter the bytes).
+    # Payloads are dequantized to f32 before any accumulation.
+    grad_transport: str = "raw"
     # transient-I/O retry/backoff shared by the page prefetcher and the
     # histogram-store fetch path (repro.fault.RetryPolicy); attempts/aborts
     # are accounted in TransferStats.io_retries / io_giveups
@@ -112,6 +123,12 @@ class ExecutionPolicy:
             raise ValueError("hist_budget_bytes must be >= 0 or None")
         if self.hist_retained_levels < 1:
             raise ValueError("hist_retained_levels must be >= 1")
+        # resolve-time validation: an unknown codec/transport should fail at
+        # policy construction, not mid-fit
+        from repro.compress import GradQuantizer, get_codec
+
+        get_codec(self.page_codec)
+        GradQuantizer.resolve(self.grad_transport)
 
     # ------------------------------------------------------------- byte model
     def memory_model(self, dm, params) -> DeviceMemoryModel:
@@ -124,6 +141,8 @@ class ExecutionPolicy:
             if getattr(params, "grow_policy", "depthwise") == "lossguide"
             else 0
         )
+        from repro.compress import model_bits
+
         return DeviceMemoryModel(
             num_features=dm.num_features,
             max_bin=max(dm.n_bins, 1),
@@ -132,6 +151,7 @@ class ExecutionPolicy:
             hist_retained_levels=self.hist_retained_levels,
             hist_budget_bytes=self.hist_budget_bytes,
             max_leaves=max_leaves,
+            page_codec_bits=model_bits(self.page_codec, max(dm.n_bins, 1)),
             **kw,
         )
 
@@ -186,7 +206,7 @@ class ExecutionPolicy:
         n = dm.n_rows
         in_core_bytes = (
             model.fixed_bytes
-            + dm.estimated_device_bytes()
+            + model.matrix_device_bytes(dm.estimated_device_bytes())
             + n * (model.row_state_bytes + 8)
         )
         if in_core_bytes <= model.hbm_bytes:

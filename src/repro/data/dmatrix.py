@@ -90,6 +90,7 @@ class PageSet:
         put=None,
         indices: Iterable[int] | None = None,
         retry=None,
+        codec: str | None = None,
     ) -> PageStream:
         """One pass of the unified pipeline engine over this page set.
 
@@ -97,8 +98,12 @@ class PageSet:
         keep their global page numbering, so per-page state keyed by index
         stays valid) — the per-node page-skipping path of lossguide builds.
         ``retry`` is the prefetcher's `repro.fault.RetryPolicy` (None = its
-        defaults).
+        defaults). ``codec`` names a `repro.compress` page codec; device-
+        decodable codecs (``"bitpack"``) stage the packed wire payload and
+        expand on device, anything else stages uncompressed.
         """
+        from repro.compress import make_transport
+
         common = dict(
             to_array=_bins_to_host_array,
             put=put or _put_bins,
@@ -107,6 +112,7 @@ class PageSet:
             staging_depth=staging_depth,
             cache=cache,
             retry=retry,
+            transport=make_transport(codec),
         )
         if self.host_pages is not None:
             return PageStream.from_host_pages(self.host_pages, indices=indices, **common)
@@ -120,12 +126,24 @@ class PageSet:
         """Host-side pass (no device staging); disk pages go through the prefetcher."""
         yield from self.stream(prefetch_depth=prefetch_depth).iter_host()
 
-    def stage(self, page: EllpackPage) -> Array:
+    def stage(self, page: EllpackPage, codec: str | None = None) -> Array:
         """Host -> device copy of one page ("CopyToGPU"); counted for the paging model."""
-        self.stats.host_to_device_bytes += page.nbytes
+        from repro.compress import make_transport
+
+        transport = make_transport(codec)
+        arr = _bins_to_host_array(page)
         t0 = time.perf_counter()
-        out = _put_bins(_bins_to_host_array(page))
+        if transport is not None:
+            wire, wire_meta = transport.encode(arr)
+            out = transport.decode(_put_bins(wire), wire_meta)
+            wire_nbytes = wire.nbytes
+        else:
+            out = _put_bins(arr)
+            wire_nbytes = arr.nbytes
         dt = time.perf_counter() - t0
+        self.stats.host_to_device_bytes += wire_nbytes
+        self.stats.logical_bytes += arr.nbytes
+        self.stats.wire_bytes += wire_nbytes
         # a lone synchronous put overlaps nothing: book equal stage and wall
         # time so it cannot inflate overlap_ratio
         self.stats.stream_stage_seconds += dt
@@ -273,7 +291,9 @@ class IterDMatrix(DMatrix):
     gather (Alg. 3), then quantization into ~``page_bytes`` ELLPACK pages
     (Alg. 5) written through a `PageStore` when ``cache_dir`` is given (disk
     spill, reopenable later via `PagedDMatrix`) or kept as host-RAM pages
-    otherwise.
+    otherwise. ``page_codec`` names a lossless `repro.compress` codec applied
+    to each page blob on disk (recorded per page in the manifest, so the
+    cache reopens with any reader).
     """
 
     def __init__(
@@ -285,6 +305,7 @@ class IterDMatrix(DMatrix):
         cache_dir: str | None = None,
         page_bytes: int = DEFAULT_PAGE_BYTES,
         compress: bool = False,
+        page_codec: str = "raw",
         stats: TransferStats | None = None,
     ):
         batches = _as_batch_callback(source)
@@ -320,7 +341,7 @@ class IterDMatrix(DMatrix):
         store = host_pages = None
         row_offsets: list[int] = []
         if cache_dir is not None:
-            store = PageStore(cache_dir, compress=compress, stats=self.stats)
+            store = PageStore(cache_dir, compress=compress, stats=self.stats, codec=page_codec)
         else:
             host_pages = []
         for page in create_ellpack_pages(

@@ -12,7 +12,13 @@ CRC32-checksummed in the manifest (itself replaced atomically), so a crash
 mid-write never leaves a half-written page that a later `PagedDMatrix` reopen
 would trust — the torn page is simply absent from the manifest. `read_page`
 verifies the stored CRC and raises `PageCorruptError` naming the page index
-instead of decoding garbage. Transient read faults are retried with
+instead of decoding garbage. Pages optionally pass through a lossless
+`repro.compress` codec (``codec="bitpack"``/``"delta-rle"``/chains); the codec
+name + meta are recorded per page in the manifest, so mixed and legacy
+(pre-codec) caches decode correctly, and a garbled compressed payload
+surfaces as `PageDecodeError` (a `PageCorruptError`) naming the codec and
+page index via the ``page_store.decode`` fault site. Transient read faults
+are retried with
 exponential backoff through `repro.fault.RetryPolicy` (attempts/aborts in
 ``TransferStats.io_retries`` / ``io_giveups``), and both store and prefetcher
 fire `repro.fault.inject` sites so chaos tests can plant deterministic I/O
@@ -72,12 +78,24 @@ class TransferStats:
     hist_fetch_bytes: int = 0
     hist_spills: int = 0
     hist_fetches: int = 0
+    # --- compression ledger (filled everywhere pages/histograms stage) ---
+    # logical_bytes is what the device consumes after decode; wire_bytes is
+    # what actually crossed host->device. With page_codec="raw" they are
+    # equal; a codec's win is exactly logical_bytes - wire_bytes. Disk-side
+    # savings show up in disk_read/write_bytes instead (the blob shrinks).
+    logical_bytes: int = 0
+    wire_bytes: int = 0
     # --- retry ledger (filled by repro.fault.RetryPolicy.call) ---
     # io_retries counts re-attempts that a transient fault cost us (page
     # reads, histogram staging, elastic RPCs); io_giveups counts operations
     # that exhausted their attempt budget and surfaced the error
     io_retries: int = 0
     io_giveups: int = 0
+
+    @property
+    def wire_ratio(self) -> float:
+        """wire/logical staged bytes (1.0 = uncompressed, lower = better)."""
+        return self.wire_bytes / self.logical_bytes if self.logical_bytes > 0 else 1.0
 
     @property
     def stream_serial_seconds(self) -> float:
@@ -112,6 +130,8 @@ class TransferStats:
         self.hist_fetch_bytes = 0
         self.hist_spills = 0
         self.hist_fetches = 0
+        self.logical_bytes = 0
+        self.wire_bytes = 0
         self.io_retries = 0
         self.io_giveups = 0
 
@@ -155,6 +175,23 @@ class PageCorruptError(OSError):
         )
 
 
+class PageDecodeError(PageCorruptError):
+    """A page blob passed CRC but failed codec decode (truncated/garbled
+    payload, stale codec meta). Deterministic damage like a CRC mismatch —
+    never retried — naming the codec and page index."""
+
+    def __init__(self, idx: int, path: str, codec: str, cause: Exception):
+        self.idx = idx
+        self.path = path
+        self.codec = codec
+        OSError.__init__(
+            self,
+            f"page {idx} failed {codec!r} decode on {path}: {cause!r}. The "
+            f"compressed payload is damaged — rebuild the page cache from "
+            f"the raw source (IterDMatrix).",
+        )
+
+
 def _atomic_write(path: str, data: bytes) -> None:
     """Write bytes durably: tmp file in the same dir, fsync, `os.replace`.
 
@@ -192,10 +229,19 @@ class PageStore:
     describes a fully consistent store).
     """
 
-    def __init__(self, root: str, compress: bool = False, stats: TransferStats | None = None):
+    def __init__(
+        self,
+        root: str,
+        compress: bool = False,
+        stats: TransferStats | None = None,
+        codec: str = "raw",
+    ):
+        from repro.compress import get_codec
+
         self.root = root
         self.compress = compress
         self.stats = stats or GLOBAL_STATS
+        self.codec = get_codec(codec)
         os.makedirs(root, exist_ok=True)
         self._meta: dict = {"pages": []}
         self._meta_path = os.path.join(root, "manifest.json")
@@ -213,10 +259,24 @@ class PageStore:
     def write_page(self, arrays: dict[str, np.ndarray], meta: dict | None = None) -> int:
         idx = self.n_pages
         fault_inject.fire("page_store.write_page", index=idx)
+        codec_meta: dict = {}
+        if self.codec.name != "raw":
+            # only uint8 payloads (ELLPACK bin pages) go through the codec;
+            # labels/float sidecars pass through verbatim
+            coded = {}
+            for key, arr in arrays.items():
+                if isinstance(arr, np.ndarray) and arr.dtype == np.uint8:
+                    coded[key], codec_meta[key] = self.codec.encode(arr)
+                else:
+                    coded[key] = arr
+            arrays = coded
         blob = _encode(arrays, self.compress)
         _atomic_write(self._path(idx), blob)
         self.stats.disk_write_bytes += len(blob)
         entry = {"idx": idx, "bytes": len(blob), "crc32": zlib.crc32(blob)}
+        entry["codec"] = self.codec.name
+        if codec_meta:
+            entry["codec_meta"] = codec_meta
         entry.update(meta or {})
         self._meta["pages"].append(entry)
         # manifest last: a crash before this point leaves the fresh blob
@@ -236,7 +296,24 @@ class PageStore:
             got = zlib.crc32(blob)
             if got != want:
                 raise PageCorruptError(idx, self._path(idx), want, got)
-        out = _decode(blob)
+        # decode with the codec the *entry* was written with — legacy
+        # (pre-codec) manifests have no "codec" field and decode as raw, so
+        # old caches reopen bit-for-bit
+        codec_name = entry.get("codec", "raw")
+        try:
+            fault_inject.fire("page_store.decode", index=idx, codec=codec_name)
+            out = _decode(blob)
+            codec_meta = entry.get("codec_meta") or {}
+            if codec_meta:
+                from repro.compress import get_codec
+
+                codec = get_codec(codec_name)
+                for key, cmeta in codec_meta.items():
+                    out[key] = codec.decode(out[key], cmeta)
+        except PageCorruptError:
+            raise
+        except Exception as err:
+            raise PageDecodeError(idx, self._path(idx), codec_name, err) from err
         self.stats.disk_read_bytes += len(blob)
         self.stats.page_loads += 1
         self.stats.load_seconds += time.perf_counter() - t0

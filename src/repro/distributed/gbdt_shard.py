@@ -96,6 +96,47 @@ class DistConfig:
     # only the built half of each level/window.
     hist_budget_bytes: int | None = None
     hist_retained_levels: int = 1
+    # wire transport for the cross-shard histogram psum (repro.compress
+    # GradQuantizer): "raw" (f32, bit-for-bit), "f16" or "bf16" (half the
+    # all-reduce bytes). Supersedes the legacy hist_dtype="bfloat16" knob
+    # (still honored when grad_transport is "raw"). "int8" is rejected here
+    # — integer partial sums overflow across shards — use it on the
+    # HistogramStore spill transport instead.
+    grad_transport: str = "raw"
+    # lossless page codec for sharded staging (repro.compress): "bitpack"
+    # stages the packed wire payload to every shard and expands on device.
+    # Device-decodable codecs require feature_axis=None (packed bytes can
+    # only be row-sharded; a byte does not split across feature shards).
+    page_codec: str = "raw"
+
+    def __post_init__(self) -> None:
+        from repro.compress import GradQuantizer, get_codec, make_transport
+
+        get_codec(self.page_codec)
+        GradQuantizer.resolve(self.grad_transport).psum_cast  # mode check
+        if self.grad_transport not in ("raw", "f16", "bf16"):
+            raise ValueError(
+                f"DistConfig(grad_transport={self.grad_transport!r}) cannot "
+                "back the histogram psum: int8 partial sums overflow across "
+                "shards. Use 'f16'/'bf16' here, and point 'int8' at the "
+                "spill transport (ExecutionPolicy(grad_transport='int8'))"
+            )
+        if make_transport(self.page_codec) is not None and self.feature_axis is not None:
+            raise ValueError(
+                f"DistConfig(page_codec={self.page_codec!r}) stages packed "
+                "bytes, which only shard by rows; feature_axis="
+                f"{self.feature_axis!r} would split symbols mid-byte. Drop "
+                "feature_axis or use page_codec='raw'"
+            )
+
+    @property
+    def grad_quantizer(self):
+        """The psum transport, folding in the legacy hist_dtype knob."""
+        from repro.compress import GradQuantizer
+
+        if self.grad_transport == "raw" and self.hist_dtype == "bfloat16":
+            return GradQuantizer("bf16")
+        return GradQuantizer(self.grad_transport)
 
     @property
     def all_axes(self) -> tuple[str, ...]:
@@ -127,10 +168,9 @@ def check_feature_parallel_lossguide(tp: TreeParams, cfg: DistConfig) -> None:
 
 
 def _psum_hist(hist: Array, cfg: DistConfig) -> Array:
-    if cfg.hist_dtype == "bfloat16":
-        hist = hist.astype(jnp.bfloat16)
-    out = jax.lax.psum(hist, cfg.data_axes)
-    return out.astype(jnp.float32)
+    q = cfg.grad_quantizer
+    out = jax.lax.psum(q.psum_cast(hist), cfg.data_axes)
+    return q.psum_restore(out)
 
 
 def _feature_shard_info(cfg: DistConfig):
@@ -421,6 +461,7 @@ def _grow_tree_distributed_lossguide(
         budget_bytes=cfg.hist_budget_bytes,
         retained_levels=cfg.hist_retained_levels,
         transfer_stats=transfer_stats,
+        grad_transport=cfg.grad_transport,  # narrows spill/fetch wires too
     )
     tree = grow_tree_lossguide_generic(
         hist_fn, partition_fn, jnp.sum(g_j), jnp.sum(h_j), n_bins, bin_valid,
@@ -587,7 +628,9 @@ def grow_tree_distributed_paged(
     ``make_stream`` accepts an ``indices=`` kwarg (forward it to
     ``PageSet.stream`` / ``PageStream.from_host_pages``), pages with no row in
     the popped node's window are skipped outright (``page_skipping``; skips
-    land in ``TransferStats.pages_skipped``). Pass the stream's
+    land in ``TransferStats.pages_skipped``). Build the stream with
+    ``codec=cfg.page_codec`` (``PageSet.stream`` forwards it) to stage packed
+    wire payloads — row-wise bitpacking keeps each staged page row-shardable. Pass the stream's
     `TransferStats` as ``transfer_stats`` so the tiered store's histogram
     spill/fetch traffic (``DistConfig.hist_budget_bytes``) lands in the same
     ledger as the page traffic.
@@ -601,6 +644,7 @@ def grow_tree_distributed_paged(
         budget_bytes=cfg.hist_budget_bytes,
         retained_levels=cfg.hist_retained_levels,
         transfer_stats=transfer_stats,
+        grad_transport=cfg.grad_transport,  # narrows spill/fetch wires too
     )
     tree, positions = build_tree_paged(
         make_stream, list(page_extents), g, h, n_bins, bin_valid, tp,
@@ -678,10 +722,28 @@ def fit_sharded(
     booster.stats = TransferStats()
     n_bins = dm.n_bins
     bin_valid = bin_valid_from_cuts(dm.cuts, n_bins)
-    bins = jax.device_put(
-        dm.single_page_bins().astype(np.int32),
-        NamedSharding(mesh, P(cfg.data_axes, cfg.feature_axis)),
-    )
+    from repro.compress import make_transport
+
+    transport = make_transport(cfg.page_codec)
+    host_bins = dm.single_page_bins()
+    if transport is None:
+        bins = jax.device_put(
+            host_bins.astype(np.int32),
+            NamedSharding(mesh, P(cfg.data_axes, cfg.feature_axis)),
+        )
+        wire_nbytes = host_bins.nbytes * 4  # the int32 upcast crosses as-is
+    else:
+        # row-wise bitpacking keeps each row's packed bytes self-contained,
+        # so the wire payload row-shards exactly like the raw matrix
+        # (feature_axis is rejected in DistConfig.__post_init__)
+        wire, wire_meta = transport.encode(np.ascontiguousarray(host_bins))
+        bins = transport.decode(
+            jax.device_put(wire, NamedSharding(mesh, P(cfg.data_axes))), wire_meta
+        )
+        wire_nbytes = wire.nbytes
+    booster.stats.host_to_device_bytes += wire_nbytes
+    booster.stats.logical_bytes += host_bins.nbytes
+    booster.stats.wire_bytes += wire_nbytes
     labels_j = jnp.asarray(labels)
     booster.base_margin_ = (
         params.base_score

@@ -12,6 +12,9 @@ Instrumented sites:
 
   "page_store.read_page"        ctx: index          (repro.data.pages)
   "page_store.write_page"       ctx: index
+  "page_store.decode"           ctx: index, codec   (post-CRC codec decode;
+                                a planted or natural failure here surfaces
+                                as the non-retryable PageDecodeError)
   "hist_store.fetch"            ctx: -              (repro.core.histcache)
   "elastic.rpc"                 ctx: worker, op     (elastic worker loop)
   "elastic.worker.iteration"    ctx: worker, iteration

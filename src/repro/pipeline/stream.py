@@ -76,6 +76,12 @@ class PageStream:
     retry : `RetryPolicy` for the threaded prefetcher's transient-fault
         retries (None = the policy's defaults); attempts/aborts land in
         ``stats.io_retries`` / ``io_giveups``.
+    transport : optional `repro.compress.PageTransport` (or the forest wire
+        packer). When set, ``to_array``'s output is encoded on host, only
+        the wire payload crosses through ``put``, and the staged device
+        buffer is decoded back on device — the consumer still sees the full
+        logical page. The ledger books both sides: ``logical_bytes`` (what
+        the device consumes) vs ``wire_bytes`` (what actually crossed).
 
     A `PageStream` is re-iterable: each ``iter()`` is an independent pass.
     """
@@ -94,6 +100,7 @@ class PageStream:
         cache_tag: str = "page",
         stats: TransferStats | None = None,
         retry: RetryPolicy | None = None,
+        transport: Any | None = None,
     ):
         self._fetch = fetch
         self._indices = list(indices)
@@ -106,6 +113,7 @@ class PageStream:
         self.cache_tag = cache_tag
         self.stats = stats or GLOBAL_STATS
         self.retry = retry
+        self.transport = transport
 
     # ------------------------------------------------------------ constructors
     @classmethod
@@ -194,11 +202,19 @@ class PageStream:
                 return StreamedPage(idx, host, dev)
         arr = self._to_array(host)
         t0 = time.perf_counter()
-        dev = self._put(arr)
+        if self.transport is not None:
+            wire, wire_meta = self.transport.encode(arr)
+            dev = self.transport.decode(self._put(wire), wire_meta)
+            wire_nbytes = wire.nbytes
+        else:
+            dev = self._put(arr)
+            wire_nbytes = arr.nbytes
         self.stats.stream_stage_seconds += time.perf_counter() - t0
-        self.stats.host_to_device_bytes += arr.nbytes
+        self.stats.host_to_device_bytes += wire_nbytes
+        self.stats.logical_bytes += arr.nbytes
+        self.stats.wire_bytes += wire_nbytes
         if self.cache is not None:
-            self.cache.put(key, dev, arr.nbytes)
+            self.cache.put(key, dev, wire_nbytes)
         return StreamedPage(idx, host, dev)
 
     def __iter__(self) -> Iterator[StreamedPage]:

@@ -39,17 +39,40 @@ def _forest_stream(
     trees_per_chunk: int,
     stats: TransferStats,
     staging_depth: int = 2,
+    transport=None,
 ) -> PageStream:
     """The forest's tree-chunks as a PageStream (host RAM pages, double-
-    buffered staging; chunk k+1's device put overlaps chunk k's traversal)."""
+    buffered staging; chunk k+1's device put overlaps chunk k's traversal).
+    With a `repro.compress.ForestPageTransport`, each chunk crosses as a
+    14-byte/node wire payload and decodes to the unpacked field dict on
+    device (losslessly — the f32 planes cross verbatim)."""
     extents = [
         (lo, min(lo + trees_per_chunk, forest.n_trees))
         for lo in range(0, forest.n_trees, trees_per_chunk)
     ]
     pages = [forest.pack_page(lo, hi) for lo, hi in extents]
     return PageStream.from_host_pages(
-        pages, stats=stats, cache_tag="forest", staging_depth=staging_depth
+        pages, stats=stats, cache_tag="forest", staging_depth=staging_depth,
+        transport=transport,
     )
+
+
+def _forest_transport(page_codec: str | None):
+    """The forest wire packer when any non-raw page codec is active: the
+    paged-forest chunks ride the same compression policy as row pages."""
+    from repro.compress import ForestPageTransport, get_codec
+
+    if page_codec is None or get_codec(page_codec).name == "raw":
+        return None
+    return ForestPageTransport()
+
+
+def _chunk_arrays(fp_device) -> dict:
+    """Unpacked per-field device arrays of one staged forest chunk — already
+    a dict when a transport decoded it on device."""
+    if isinstance(fp_device, dict):
+        return fp_device
+    return PackedForest.unpack_page(fp_device)
 
 
 def resolve_trees_per_chunk(
@@ -91,12 +114,15 @@ def predict_margin_dmatrix(
     staging_depth: int = 2,
     impl: str = "auto",
     stats: TransferStats | None = None,
+    page_codec: str | None = None,
 ) -> np.ndarray:
     """Margins for every row of a DMatrix, streaming pages (and tree-chunks).
 
     Bit-for-bit the in-core fused forest over `single_page_bins()`: row pages
     partition the batch (per-row work is independent) and tree-chunks chain
-    their partial margins in tree order.
+    their partial margins in tree order. ``page_codec`` (repro.compress)
+    packs both row pages and forest chunks on the wire — still bit-for-bit,
+    the codecs are lossless.
     """
     pages = dm.page_set()
     stats = stats if stats is not None else pages.stats
@@ -108,7 +134,8 @@ def predict_margin_dmatrix(
 
     def data_stream() -> PageStream:
         return pages.stream(
-            prefetch_depth=prefetch_depth, staging_depth=staging_depth
+            prefetch_depth=prefetch_depth, staging_depth=staging_depth,
+            codec=page_codec,
         )
 
     if chunk is None:
@@ -126,8 +153,11 @@ def predict_margin_dmatrix(
     # what the TransferStats ledger will show
     from repro.kernels import ops
 
-    for fp in _forest_stream(forest, chunk, stats, staging_depth=staging_depth):
-        arrays = PackedForest.unpack_page(fp.device)
+    for fp in _forest_stream(
+        forest, chunk, stats, staging_depth=staging_depth,
+        transport=_forest_transport(page_codec),
+    ):
+        arrays = _chunk_arrays(fp.device)
         for sp in data_stream():
             ro, nr = sp.host.row_offset, sp.host.n_rows
             out = ops.predict_forest(
@@ -158,6 +188,7 @@ class ForestServer:
         trees_per_chunk: int | None = None,
         impl: str = "auto",
         stats: TransferStats | None = None,
+        page_codec: str | None = None,
     ):
         self.forest = (
             forest_or_booster
@@ -168,6 +199,7 @@ class ForestServer:
         self.trees_per_chunk = trees_per_chunk
         self.impl = impl
         self.stats = stats if stats is not None else TransferStats()
+        self.page_codec = page_codec
         self.objective = obj_lib.get_objective(self.forest.objective)
 
     # ----------------------------------------------------------- prediction
@@ -177,7 +209,7 @@ class ForestServer:
             return predict_margin_dmatrix(
                 self.forest, data, model=self.model,
                 trees_per_chunk=self.trees_per_chunk, impl=self.impl,
-                stats=self.stats,
+                stats=self.stats, page_codec=self.page_codec,
             )
         X = np.asarray(data)
         forest = self.forest
@@ -193,8 +225,10 @@ class ForestServer:
             raise ValueError("PackedForest has no cuts; predict from bins instead")
         bins = jnp.asarray(bin_batch(X, forest.cuts).astype(np.int32))
         margin = jnp.full(X.shape[0], forest.base_margin, jnp.float32)
-        for fp in _forest_stream(forest, chunk, self.stats):
-            arrays = PackedForest.unpack_page(fp.device)
+        for fp in _forest_stream(
+            forest, chunk, self.stats, transport=_forest_transport(self.page_codec)
+        ):
+            arrays = _chunk_arrays(fp.device)
             margin = ops.predict_forest(
                 bins,
                 arrays["feature"], arrays["split_bin"], arrays["default_left"],

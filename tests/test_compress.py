@@ -1,0 +1,518 @@
+"""repro.compress: lossless page codecs + quantized gradient transport.
+
+The compression contract, as tests: every codec round-trips bit-for-bit
+(``decode(encode(x)) == x`` for any uint8 page, missing sentinel included),
+device decode of a staged bitpack payload equals the host decode, and — the
+part that matters — forests grown through compressed transfer paths are
+EXACTLY the uncompressed forests, in-core, streaming, and distributed. The
+wire ledger (``TransferStats.logical_bytes`` / ``wire_bytes``) must show the
+savings wherever a codec is active and show 1.0 wherever it is not.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+from oracle import assert_forests_equal
+
+import jax
+import jax.numpy as jnp
+
+from repro.compress import (
+    BitpackCodec,
+    DeltaRLECodec,
+    ForestPageTransport,
+    GradQuantizer,
+    PageTransport,
+    available_codecs,
+    get_codec,
+    make_transport,
+    model_bits,
+)
+from repro.core import BoosterParams, ExecutionPolicy, GradientBooster
+from repro.core.histcache import HistogramStore
+from repro.core.memory import DeviceMemoryModel
+from repro.data.dmatrix import ArrayDMatrix, IterDMatrix, PagedDMatrix
+from repro.data.pages import (
+    PageCorruptError,
+    PageDecodeError,
+    PageStore,
+    TransferStats,
+)
+from repro.data.synthetic import SyntheticSource
+from repro.fault import FaultSpec, injected
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - dev extra absent
+    HAVE_HYPOTHESIS = False
+
+PARAMS = dict(n_estimators=5, max_depth=3, max_bin=32, objective="binary:logistic")
+PAGE_BYTES = 8 * 1024
+CODECS = ["raw", "bitpack", "delta-rle", "bitpack+delta-rle"]
+
+
+@pytest.fixture(scope="module")
+def source():
+    return SyntheticSource(n_rows=1200, num_features=28, batch_rows=256, task="higgs", seed=3)
+
+
+@pytest.fixture(scope="module")
+def arrays(source):
+    return source.materialize()
+
+
+@pytest.fixture(scope="module")
+def iter_dm(source):
+    return IterDMatrix(source, max_bin=32, page_bytes=PAGE_BYTES)
+
+
+def _booster(policy=None, **overrides):
+    kw = dict(PARAMS)
+    kw.update(overrides)
+    return GradientBooster(BoosterParams(seed=0, **kw), policy=policy)
+
+
+def _pages():
+    """A grid of uint8 pages covering the codec edge cases."""
+    rng = np.random.default_rng(0)
+    sorted_page = np.sort(rng.integers(0, 16, size=(64, 8)).astype(np.uint8), axis=None).reshape(64, 8)
+    with_missing = rng.integers(0, 64, size=(33, 7)).astype(np.uint8)
+    with_missing[rng.random(with_missing.shape) < 0.2] = 255
+    return [
+        rng.integers(0, 32, size=(50, 4)).astype(np.uint8),
+        rng.integers(0, 64, size=(128, 28)).astype(np.uint8),
+        with_missing,
+        sorted_page,
+        np.full((10, 3), 255, dtype=np.uint8),  # all-missing
+        np.zeros((0, 4), dtype=np.uint8),  # empty page
+        np.arange(256, dtype=np.uint8).reshape(1, 256),  # full alphabet
+        rng.integers(0, 2, size=(17,)).astype(np.uint8),  # 1-D, binary
+    ]
+
+
+# ------------------------------------------------------------------ codec layer
+@pytest.mark.parametrize("name", CODECS)
+def test_codec_roundtrip_is_exact(name):
+    codec = get_codec(name)
+    for page in _pages():
+        payload, meta = codec.encode(page)
+        out = codec.decode(payload, meta)
+        assert out.dtype == np.uint8
+        np.testing.assert_array_equal(out, page)
+        # meta must survive the manifest's JSON round trip
+        out2 = codec.decode(payload, json.loads(json.dumps(meta)))
+        np.testing.assert_array_equal(out2, page)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=60, deadline=None)
+    @given(
+        name=st.sampled_from(CODECS),
+        rows=st.integers(0, 40),
+        cols=st.integers(1, 12),
+        n_bins=st.sampled_from([2, 16, 64, 255]),
+        missing_rate=st.floats(0.0, 1.0),
+        seed=st.integers(0, 2**16),
+    )
+    def test_codec_roundtrip_property(name, rows, cols, n_bins, missing_rate, seed):
+        rng = np.random.default_rng(seed)
+        page = rng.integers(0, n_bins, size=(rows, cols)).astype(np.uint8)
+        page[rng.random(page.shape) < missing_rate] = 255
+        codec = get_codec(name)
+        payload, meta = codec.encode(page)
+        np.testing.assert_array_equal(codec.decode(payload, meta), page)
+
+
+def test_bitpack_adapts_bits_to_page_alphabet():
+    codec = BitpackCodec()
+    rng = np.random.default_rng(1)
+    full64 = rng.integers(0, 64, size=(256, 16)).astype(np.uint8)
+    full64[0, 0] = 63  # pin the max so bits is deterministic
+    payload, meta = codec.encode(full64)
+    assert meta["bits"] == 6 and meta["missing"] is None
+    assert payload.nbytes == full64.shape[0] * ((16 * 6 + 7) // 8)
+    assert payload.nbytes / full64.nbytes == 0.75  # the n_bins=64 headline ratio
+
+    with_missing = full64.copy()
+    with_missing[1, 1] = 255
+    _, meta_m = codec.encode(with_missing)
+    assert meta_m["missing"] == 64 and meta_m["bits"] == 7  # alphabet grew by one
+
+
+def test_bitpack_device_decode_matches_host_decode():
+    codec = BitpackCodec()
+    for page in _pages():
+        if page.size == 0:
+            continue
+        payload, meta = codec.encode(page)
+        host = codec.decode(payload, meta)
+        dev = codec.device_decode(jnp.asarray(payload), meta)
+        np.testing.assert_array_equal(np.asarray(dev), host.astype(np.int32))
+        # the staging put may upcast the wire to int32 — decode is agnostic
+        dev32 = codec.device_decode(jnp.asarray(payload.astype(np.int32)), meta)
+        np.testing.assert_array_equal(np.asarray(dev32), host.astype(np.int32))
+
+
+def test_delta_rle_shrinks_sorted_pages():
+    codec = DeltaRLECodec()
+    sorted_page = np.sort(
+        np.random.default_rng(2).integers(0, 32, size=4096).astype(np.uint8)
+    )
+    payload, _ = codec.encode(sorted_page)
+    # a sorted page deltas to long zero runs: far below 1 byte/symbol
+    assert payload.nbytes < 0.2 * sorted_page.nbytes
+
+
+def test_registry_chains_and_transport_selection():
+    assert {"raw", "bitpack", "delta-rle"} <= set(available_codecs())
+    assert get_codec(None).name == "raw"
+    chain = get_codec("bitpack+delta-rle")
+    assert [c.name for c in chain.codecs] == ["bitpack", "delta-rle"]
+    with pytest.raises(ValueError, match="unknown page codec"):
+        get_codec("gzip")
+    # only device-decodable plain codecs get a staging transport
+    assert make_transport(None) is None
+    assert make_transport("raw") is None
+    assert make_transport("delta-rle") is None
+    assert make_transport("bitpack+delta-rle") is None
+    assert make_transport("bitpack") is not None
+    with pytest.raises(ValueError, match="cannot decode on device"):
+        PageTransport(DeltaRLECodec())
+    # the memory model plans worst-case alphabet bits, 8 when nothing stages
+    assert model_bits("raw", 64) == 8
+    assert model_bits("delta-rle", 64) == 8
+    assert model_bits("bitpack", 64) == 7  # +1 missing symbol
+    assert model_bits("bitpack", 32) == 6
+
+
+def test_forest_page_transport_roundtrip_and_ratio(iter_dm, arrays):
+    from repro.serve.forest import PackedForest
+
+    b = _booster(ExecutionPolicy(mode="in_core"))
+    b.fit(iter_dm)
+    forest = PackedForest.from_booster(b)
+    page = forest.pack_page(0, forest.n_trees)
+    t = ForestPageTransport()
+    wire, meta = t.encode(np.asarray(page))
+    assert meta["mode"] == "packed"
+    assert wire.nbytes / np.asarray(page).nbytes == pytest.approx(14 / 24)
+    got = t.decode(jnp.asarray(wire), meta)
+    want = PackedForest.unpack_page(jnp.asarray(page))
+    for key in ("feature", "split_bin", "split_value", "default_left", "is_leaf", "leaf_value"):
+        np.testing.assert_array_equal(np.asarray(got[key]), np.asarray(want[key]))
+
+    # node ids beyond int16 fall back to the verbatim f32 wire — still exact
+    big = np.zeros((6, 1, 4), np.float32)
+    big[0, 0, :] = 40_000.0
+    wire_b, meta_b = t.encode(big)
+    assert meta_b["mode"] == "raw"
+    got_b = t.decode(jnp.asarray(wire_b), meta_b)
+    np.testing.assert_array_equal(np.asarray(got_b["feature"]), big[0].astype(np.int32))
+
+
+# -------------------------------------------------------------- grad quantizer
+def test_grad_quantizer_modes_and_psum_guard():
+    rng = np.random.default_rng(3)
+    vals = rng.normal(size=(2, 5, 8)).astype(np.float32)
+    raw = GradQuantizer.resolve("raw")
+    assert raw.is_raw and raw is GradQuantizer.resolve(raw)
+    arr = jnp.asarray(vals)
+    payload, scale = raw.quantize(arr)
+    assert scale is None
+    np.testing.assert_array_equal(np.asarray(raw.dequantize(payload, scale)), vals)
+
+    f16 = GradQuantizer("f16")
+    exact = vals.astype(np.float16).astype(np.float32)  # f16-representable
+    payload, scale = f16.quantize(jnp.asarray(exact))
+    assert payload.nbytes == exact.nbytes // 2
+    np.testing.assert_array_equal(np.asarray(f16.dequantize(payload, scale)), exact)
+
+    i8 = GradQuantizer("int8")
+    payload, scale = i8.quantize(arr)
+    assert payload.nbytes == vals.nbytes // 4 and scale is not None
+    err = np.abs(np.asarray(i8.dequantize(payload, scale)) - vals)
+    assert err.max() <= np.abs(vals).max() / 127 + 1e-6
+    with pytest.raises(ValueError, match="int8"):
+        i8.psum_cast(arr)  # int8 partials would overflow under psum
+
+    for mode in ("raw", "f16", "bf16"):
+        q = GradQuantizer(mode)
+        np.testing.assert_allclose(
+            np.asarray(q.psum_restore(q.psum_cast(arr))), vals, rtol=1e-2, atol=1e-2
+        )
+    with pytest.raises(ValueError, match="grad transport"):
+        GradQuantizer("fp4")
+
+
+# ------------------------------------------------------------------- page store
+def test_page_store_codec_shrinks_disk_and_reads_back(tmp_path):
+    rng = np.random.default_rng(4)
+    bins = rng.integers(0, 32, size=(256, 16)).astype(np.uint8)
+    labels = rng.normal(size=256).astype(np.float32)
+    stores = {}
+    for name in ("raw", "bitpack", "delta-rle"):
+        stats = TransferStats()
+        store = PageStore(str(tmp_path / name), stats=stats, codec=name)
+        store.write_page({"bins": bins, "labels": labels})
+        stores[name] = (store, stats)
+        out = store.read_page(0)
+        np.testing.assert_array_equal(out["bins"], bins)
+        np.testing.assert_array_equal(out["labels"], labels)  # floats pass verbatim
+        entry = store.page_meta(0)
+        assert entry["codec"] == name
+        if name != "raw":
+            assert set(entry["codec_meta"]) == {"bins"}  # only the uint8 payload codes
+    assert stores["bitpack"][1].disk_write_bytes < stores["raw"][1].disk_write_bytes
+
+    # a fresh store over the same directory decodes from the manifest alone
+    reopened = PageStore(str(tmp_path / "bitpack"))
+    np.testing.assert_array_equal(reopened.read_page(0)["bins"], bins)
+
+
+def test_page_store_legacy_manifest_decodes_as_raw(tmp_path):
+    root = str(tmp_path / "legacy")
+    bins = np.random.default_rng(5).integers(0, 32, size=(64, 8)).astype(np.uint8)
+    PageStore(root).write_page({"bins": bins})
+    manifest = os.path.join(root, "manifest.json")
+    with open(manifest) as fh:
+        meta = json.load(fh)
+    for entry in meta["pages"]:  # pre-codec manifests have no codec field at all
+        entry.pop("codec", None)
+        entry.pop("codec_meta", None)
+    with open(manifest, "w") as fh:
+        json.dump(meta, fh)
+    np.testing.assert_array_equal(PageStore(root).read_page(0)["bins"], bins)
+
+
+def test_precodec_cache_reopens_and_trains_bit_for_bit(tmp_path, source, arrays):
+    """Satellite: a PagedDMatrix over a legacy (pre-codec) cache trains the
+    exact forest an ArrayDMatrix over the same rows + cuts grows."""
+    X, y = arrays
+    cache = str(tmp_path / "pages")
+    IterDMatrix(source, max_bin=32, cache_dir=cache, page_bytes=PAGE_BYTES)
+    manifest = os.path.join(cache, "manifest.json")
+    with open(manifest) as fh:
+        meta = json.load(fh)
+    for entry in meta["pages"]:
+        entry.pop("codec", None)
+        entry.pop("codec_meta", None)
+    with open(manifest, "w") as fh:
+        json.dump(meta, fh)
+
+    re_dm = PagedDMatrix(cache)
+    b_paged = _booster(ExecutionPolicy(mode="out_of_core"))
+    b_paged.fit(re_dm)
+    dm_arr = ArrayDMatrix(X, y, max_bin=32, page_bytes=PAGE_BYTES, cuts=re_dm.cuts)
+    b_arr = _booster(ExecutionPolicy(mode="in_core"))
+    b_arr.fit(dm_arr)
+    assert_forests_equal(b_paged.trees, b_arr.trees)
+
+
+# ------------------------------------------------------------------- fault site
+def test_injected_decode_fault_is_nonretryable(tmp_path, source):
+    dm = IterDMatrix(
+        source, max_bin=32, cache_dir=str(tmp_path / "pages"),
+        page_bytes=PAGE_BYTES, page_codec="bitpack",
+    )
+    assert dm.n_pages > 1
+    ps = dm.page_set()
+    plan = [FaultSpec(site="page_store.decode", at=2)]
+    with injected(plan) as inj:
+        with pytest.raises(PageDecodeError, match=r"page 1 failed 'bitpack' decode"):
+            for _ in ps.stream():
+                pass
+        assert [(site, n) for site, n, _ in inj.fired] == [("page_store.decode", 2)]
+    # deterministic damage: surfaced immediately, never retried
+    assert ps.stats.io_retries == 0 and ps.stats.io_giveups == 0
+    assert issubclass(PageDecodeError, PageCorruptError)
+
+
+def test_garbled_codec_meta_surfaces_decode_error(tmp_path):
+    store = PageStore(str(tmp_path / "s"), codec="bitpack")
+    bins = np.random.default_rng(6).integers(0, 32, size=(64, 8)).astype(np.uint8)
+    store.write_page({"bins": bins})
+    store._meta["pages"][0]["codec_meta"]["bins"]["bits"] += 3  # stale/garbled meta
+    with pytest.raises(PageDecodeError, match="'bitpack'"):
+        store.read_page(0)
+
+
+# ----------------------------------------------------- cross-builder equivalence
+@pytest.mark.parametrize("codec", ["bitpack", "delta-rle"])
+def test_compressed_forests_equal_raw_in_core_and_streaming(iter_dm, codec):
+    """The acceptance oracle: page compression changes bytes, never bins —
+    the forest is EXACTLY the raw one in both engines."""
+    b_raw = _booster(ExecutionPolicy(mode="in_core"))
+    b_raw.fit(iter_dm)
+    b_ic = _booster(ExecutionPolicy(mode="in_core", page_codec=codec))
+    b_ic.fit(iter_dm)
+    assert_forests_equal(b_ic.trees, b_raw.trees, exact=True)
+    b_ooc = _booster(ExecutionPolicy(mode="out_of_core", page_codec=codec))
+    # every fit of the same DMatrix shares its PageSet's ledger: deltas
+    # isolate this fit's traffic (the idiom test_dmatrix.py established)
+    logical0, wire0 = iter_dm.stats.logical_bytes, iter_dm.stats.wire_bytes
+    b_ooc.fit(iter_dm)
+    assert_forests_equal(b_ooc.trees, b_raw.trees, exact=True)
+    logical = b_ooc.stats.logical_bytes - logical0
+    wire = b_ooc.stats.wire_bytes - wire0
+    if make_transport(codec) is not None:
+        assert wire < logical
+        assert wire / logical < 0.8
+    else:  # host-only codec: staging is byte-identical to raw
+        assert wire == logical > 0
+
+
+def test_raw_default_books_equal_wire_and_logical(iter_dm):
+    b = _booster(ExecutionPolicy(mode="out_of_core"))
+    logical0, wire0 = iter_dm.stats.logical_bytes, iter_dm.stats.wire_bytes
+    b.fit(iter_dm)
+    logical = b.stats.logical_bytes - logical0
+    wire = b.stats.wire_bytes - wire0
+    assert logical > 0 and wire == logical
+    assert TransferStats().wire_ratio == 1.0  # the default ledger reads 1.0
+
+
+def test_fit_sharded_page_codec_bit_for_bit(iter_dm):
+    from repro.distributed import DistConfig, fit_sharded
+
+    mesh = jax.make_mesh((1,), ("data",))
+    params = BoosterParams(seed=0, **PARAMS)
+    b_raw = fit_sharded(mesh, iter_dm, params=params, cfg=DistConfig())
+    # raw staging ships the int32-upcast bins: 4 wire bytes per logical byte
+    assert b_raw.stats.wire_bytes == 4 * b_raw.stats.logical_bytes > 0
+    b_packed = fit_sharded(
+        mesh, iter_dm, params=params, cfg=DistConfig(page_codec="bitpack")
+    )
+    assert_forests_equal(b_packed.trees, b_raw.trees, exact=True)
+    assert 0 < b_packed.stats.wire_bytes < b_packed.stats.logical_bytes
+    assert b_packed.stats.wire_bytes < b_raw.stats.wire_bytes
+
+
+def test_fit_sharded_quantized_psum_stays_close(iter_dm, arrays):
+    from repro.distributed import DistConfig, fit_sharded
+
+    X, y = arrays
+    mesh = jax.make_mesh((1,), ("data",))
+    params = BoosterParams(seed=0, **PARAMS)
+    b_raw = fit_sharded(mesh, iter_dm, params=params, cfg=DistConfig())
+    b_f16 = fit_sharded(
+        mesh, iter_dm, params=params, cfg=DistConfig(grad_transport="f16")
+    )
+    assert_forests_equal(
+        b_f16.trees, b_raw.trees,
+        min_split_agreement=0.85, leaf_rtol=5e-2, leaf_atol=5e-2,
+    )
+    np.testing.assert_allclose(
+        b_f16.predict_margin(X), b_raw.predict_margin(X), rtol=0.1, atol=0.05
+    )
+
+
+def test_config_validation():
+    from repro.distributed import DistConfig
+
+    with pytest.raises(ValueError, match="unknown page codec"):
+        ExecutionPolicy(page_codec="gzip")
+    with pytest.raises(ValueError, match="grad transport"):
+        ExecutionPolicy(grad_transport="fp4")
+    ExecutionPolicy(grad_transport="int8")  # fine for spill, rejected for psum
+    with pytest.raises(ValueError, match="int8"):
+        DistConfig(grad_transport="int8")
+    with pytest.raises(ValueError, match="unknown page codec"):
+        DistConfig(page_codec="gzip")
+    with pytest.raises(ValueError, match="row"):
+        DistConfig(page_codec="bitpack", feature_axis="model")
+
+
+# ---------------------------------------------------------------- memory model
+def test_memory_model_codec_bits(iter_dm):
+    base = DeviceMemoryModel(num_features=28, max_bin=32)
+    packed = DeviceMemoryModel(num_features=28, max_bin=32, page_codec_bits=6)
+    assert base.page_codec_bits == 8  # the default IS the pre-codec model
+    assert base.matrix_device_bytes(1000) == 1000
+    assert packed.matrix_device_bytes(1000) == (1000 * 6 + 7) // 8
+    assert packed.page_wire_bytes < base.page_wire_bytes
+    assert packed.max_rows_in_core() > base.max_rows_in_core()
+    assert packed.max_rows_out_of_core() > base.max_rows_out_of_core()
+    # the policy wires the configured codec's worst-case bits through
+    params = BoosterParams(seed=0, **PARAMS)
+    model = ExecutionPolicy(page_codec="bitpack").memory_model(iter_dm, params)
+    assert model.page_codec_bits == 6  # max_bin=32 (+ missing) -> 6 bits
+    assert ExecutionPolicy().memory_model(iter_dm, params).page_codec_bits == 8
+
+
+# ----------------------------------------------------- quantized spill transport
+@pytest.mark.parametrize(
+    "mode,divisor", [("raw", 1), ("f16", 2), ("int8", 4)]
+)
+def test_hist_store_spill_fetch_wire(mode, divisor):
+    rng = np.random.default_rng(7)
+    vals = rng.normal(size=(6, 16, 2)).astype(np.float32)
+    if mode == "f16":
+        vals = vals.astype(np.float16).astype(np.float32)
+    ts = TransferStats()
+    store = HistogramStore(transfer_stats=ts, grad_transport=mode)
+    key = ("tree", 0, 0)
+    store._put(key, jnp.asarray(vals), "level", 0.0)
+    store._spill(key)
+    assert store.tier_of(key) == "host"
+    assert ts.hist_spill_bytes == vals.nbytes // divisor
+    assert ts.device_to_host_bytes == vals.nbytes // divisor
+    out = np.asarray(store._fetch(key))
+    assert ts.hist_fetch_bytes == vals.nbytes // divisor
+    assert ts.logical_bytes == vals.nbytes  # what the build consumes
+    assert ts.wire_bytes == vals.nbytes // divisor  # what actually crossed
+    if mode == "int8":
+        assert np.abs(out - vals).max() <= np.abs(vals).max() / 127 + 1e-6
+    else:
+        np.testing.assert_array_equal(out, vals)
+
+
+def test_booster_spill_transport_end_to_end():
+    """The policy knob reaches the store: f16 spills halve the ledger and the
+    model stays within quantization tolerance of the raw-transport run."""
+    rng = np.random.default_rng(8)
+    X = rng.normal(size=(500, 6)).astype(np.float32)
+    y = (X[:, 0] + rng.normal(scale=0.2, size=500) > 0).astype(np.float32)
+    params = BoosterParams(
+        n_estimators=3, max_depth=8, max_bin=16, objective="binary:logistic",
+        seed=0, grow_policy="lossguide", max_leaves=32,
+    )
+    kw = dict(mode="in_core", hist_budget_bytes=2048, hist_retained_levels=2)
+    b_raw = GradientBooster(params, policy=ExecutionPolicy(**kw))
+    b_raw.fit(X, y)
+    b_f16 = GradientBooster(
+        params, policy=ExecutionPolicy(**kw, grad_transport="f16")
+    )
+    b_f16.fit(X, y)
+    assert b_f16.hist_cache.quantizer.mode == "f16"
+    assert b_raw.stats.hist_spills > 0
+    assert b_f16.stats.hist_spill_bytes < 0.75 * b_raw.stats.hist_spill_bytes
+    # a lossy transport may flip a handful of deep near-tie splits; the model
+    # itself must not degrade (the arxiv 2011.02022 claim)
+    from repro.core.objectives import auc
+
+    assert auc(y, b_f16.predict(X)) > auc(y, b_raw.predict(X)) - 0.02
+    same = np.isclose(
+        b_f16.predict_margin(X), b_raw.predict_margin(X), rtol=5e-2, atol=5e-2
+    )
+    assert same.mean() > 0.95
+
+
+# ------------------------------------------------------------------------ serve
+def test_serving_page_codec_bit_exact_and_thinner(iter_dm, arrays):
+    X, y = arrays
+    b = _booster(ExecutionPolicy(mode="in_core"))
+    b.fit(iter_dm)
+    from repro.serve import ForestServer
+
+    raw = ForestServer(b, trees_per_chunk=2)
+    packed = ForestServer(b, trees_per_chunk=2, page_codec="bitpack")
+    np.testing.assert_array_equal(
+        packed.predict_margin(iter_dm), raw.predict_margin(iter_dm)
+    )
+    assert packed.stats.wire_bytes < packed.stats.logical_bytes
+    # the ndarray path pages the forest through the same transport
+    np.testing.assert_array_equal(packed.predict_margin(X), raw.predict_margin(X))
