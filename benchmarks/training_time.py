@@ -96,6 +96,11 @@ def main(
         extra = f"auc={a:.4f}"
         if stats is not None:
             extra += f" overlap={stats.overlap_ratio:.2f}"
+        if stats is not None and (stats.cache_hits or stats.cache_misses):
+            # device-cache ledger: transfers skipped / lookups (sits next to
+            # overlap_ratio — both measure hidden or avoided PCIe cost)
+            results[mode]["cache_hit_rate"] = round(stats.cache_hit_rate, 3)
+            extra += f" cache_hit_rate={stats.cache_hit_rate:.2f}"
         if stats is not None and stats.logical_bytes:  # compression ledger
             results[mode]["wire_ratio"] = round(stats.wire_ratio, 3)
             if stats.wire_bytes != stats.logical_bytes:

@@ -159,6 +159,28 @@ class DeviceMemoryModel:
         """One serving launch's device working set: forest + batch."""
         return self.packed_forest_bytes(n_trees, max_depth) + self.serve_batch_bytes(batch_rows)
 
+    def serve_batch_rows(
+        self, worst_case_rows: int, measured_rows: int | None = None
+    ) -> int:
+        """The batch-rows term that sizes serving tree-chunks.
+
+        Chunk sizing historically assumed the largest row page of the matrix
+        being predicted (the worst case); a `BatchServer`'s `ServeStats`
+        occupancy history knows the real launch shape (batches padded to
+        ``max_batch`` rows), which is usually far smaller — sizing from the
+        measured shape frees budget for more resident trees. Falls back to
+        the worst-case page extent when no serving history exists.
+        """
+        if measured_rows is not None and measured_rows > 0:
+            return measured_rows
+        return worst_case_rows
+
+    def serve_residency_budget(self, batch_rows: int) -> int:
+        """Device bytes left for the shared row-page/forest-chunk residency
+        cache once one ``batch_rows`` launch working set is carved out —
+        the default ``max_bytes`` of the serving `DevicePageCache`."""
+        return max(0, self.hbm_bytes - self.serve_batch_bytes(batch_rows))
+
     def max_trees_resident(self, batch_rows: int, max_depth: int | None = None) -> int:
         """Most trees that fit on-device next to one ``batch_rows`` page —
         the paged-forest chunk size (`repro.serve.engine`); forests beyond it

@@ -91,6 +91,8 @@ class PageSet:
         indices: Iterable[int] | None = None,
         retry=None,
         codec: str | None = None,
+        cache_tag: str = "page",
+        stats: TransferStats | None = None,
     ) -> PageStream:
         """One pass of the unified pipeline engine over this page set.
 
@@ -100,17 +102,24 @@ class PageSet:
         ``retry`` is the prefetcher's `repro.fault.RetryPolicy` (None = its
         defaults). ``codec`` names a `repro.compress` page codec; device-
         decodable codecs (``"bitpack"``) stage the packed wire payload and
-        expand on device, anything else stages uncompressed.
+        expand on device, anything else stages uncompressed. ``cache_tag``
+        namespaces this matrix's pages inside a shared ``cache`` — required
+        whenever one cache outlives one matrix (the serving residency cache
+        serves many matrices; colliding keys would return the wrong rows).
+        ``stats`` redirects this pass's ledger entries (default: the page
+        set's own `TransferStats`) — the serving engine books row-page and
+        forest-chunk traffic to one ledger this way.
         """
         from repro.compress import make_transport
 
         common = dict(
             to_array=_bins_to_host_array,
             put=put or _put_bins,
-            stats=self.stats,
+            stats=stats if stats is not None else self.stats,
             prefetch_depth=prefetch_depth,
             staging_depth=staging_depth,
             cache=cache,
+            cache_tag=cache_tag,
             retry=retry,
             transport=make_transport(codec),
         )

@@ -66,6 +66,10 @@ class TransferStats:
     stream_wall_seconds: float = 0.0  # end-to-end elapsed across passes
     cache_hits: int = 0  # device-page cache hits (transfers skipped)
     cache_hit_bytes: int = 0  # host->device bytes those hits saved
+    # stages that consulted a DevicePageCache and found nothing resident; only
+    # counted when a cache is attached, so cache_hit_rate reads 0/0 (not a
+    # fake 0%) on cacheless streams
+    cache_misses: int = 0
     # pages never fetched/staged because a per-node lossguide pass proved no
     # row of theirs sits in the popped node's window (see build_tree_paged)
     pages_skipped: int = 0
@@ -91,6 +95,14 @@ class TransferStats:
     # that exhausted their attempt budget and surfaced the error
     io_retries: int = 0
     io_giveups: int = 0
+
+    @property
+    def cache_hit_rate(self) -> float:
+        """Device-cache hit fraction of cached stages (0..1); 0.0 when no
+        cache-backed stage ran. Sits next to overlap_ratio in benchmark
+        records so residency wins are ledgered, not just byte counts."""
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 0.0
 
     @property
     def wire_ratio(self) -> float:
@@ -125,6 +137,7 @@ class TransferStats:
         self.stream_wall_seconds = 0.0
         self.cache_hits = 0
         self.cache_hit_bytes = 0
+        self.cache_misses = 0
         self.pages_skipped = 0
         self.hist_spill_bytes = 0
         self.hist_fetch_bytes = 0

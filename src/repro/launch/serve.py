@@ -23,7 +23,20 @@ def serve_forest(args) -> None:
     from repro.serve import BatchServer, ForestServer, ServeStats
 
     booster = GradientBooster.load(args.forest)
-    server = ForestServer(booster, trees_per_chunk=args.trees_per_chunk)
+    stats = ServeStats()
+    pin_chunks = None
+    if args.pin_chunks == "on":
+        pin_chunks = True
+    elif args.pin_chunks == "off":
+        pin_chunks = False
+    budget = (
+        int(args.serve_budget_mib * 2**20)
+        if args.serve_budget_mib is not None else None
+    )
+    server = ForestServer(
+        booster, trees_per_chunk=args.trees_per_chunk,
+        pin_chunks=pin_chunks, serve_budget_bytes=budget, serve_stats=stats,
+    )
     forest = server.forest
     print(f"loaded forest: {forest.n_trees} trees, depth {forest.max_depth}, "
           f"{forest.nbytes / 2**20:.2f} MiB packed "
@@ -35,7 +48,8 @@ def serve_forest(args) -> None:
     # warm the jit cache so latency quantiles measure traffic, not compiles
     server.predict_margin(rows[: args.max_batch])
 
-    stats = ServeStats()
+    # one ServeStats for batcher and engine: measured launch shapes feed
+    # DeviceMemoryModel.serve_batch_rows chunk sizing, residency lands here
     with BatchServer(
         server.predict_margin, max_batch=args.max_batch,
         max_delay_ms=args.max_delay_ms, stats=stats,
@@ -53,6 +67,13 @@ def serve_forest(args) -> None:
     if server.stats.host_to_device_bytes:
         print(f"  forest paging: {server.stats.host_to_device_bytes / 2**20:.2f} MiB "
               "tree-chunk traffic")
+    ledger = server.residency()
+    if ledger:
+        print(f"  residency: {ledger['pinned_chunks']} pinned chunks "
+              f"({ledger['pinned_mib']:.2f} MiB)  "
+              f"chunk hit rate {ledger['chunk_hit_rate']:.2f}  "
+              f"h2d {ledger['h2d_mib']:.2f} MiB "
+              f"({stats.h2d_bytes_per_request:,.0f} B/request)")
 
 
 def serve_lm(args) -> None:
@@ -108,6 +129,13 @@ def main():
     ap.add_argument("--max-delay-ms", type=float, default=2.0)
     ap.add_argument("--trees-per-chunk", type=int, default=None,
                     help="page the forest in chunks of this many trees")
+    ap.add_argument("--pin-chunks", choices=["auto", "on", "off"], default="auto",
+                    help="pin forest tree-chunks device-resident under the "
+                         "shared serving budget (auto: pin when a budget is "
+                         "known; off: legacy re-streaming)")
+    ap.add_argument("--serve-budget-mib", type=float, default=None,
+                    help="byte budget (MiB) of the shared row-page/tree-chunk "
+                         "residency cache")
     ap.add_argument("--seed", type=int, default=0)
     # LM mode
     ap.add_argument("--arch", choices=LM_ARCHS,

@@ -72,6 +72,10 @@ class PageStream:
     cache : optional `DevicePageCache`; hits skip the host->device copy.
     cache_tag : namespace for cache keys so distinct streams over the same
         indices don't collide.
+    cache_pin : stage into the cache's pinned (never-evicted) tier — the
+        serving tier's pin prologue stages hot forest tree-chunks this way so
+        later row-page pressure on the shared byte budget cannot displace
+        them. Entries the pin budget refuses land in the plain LRU tier.
     stats : `TransferStats` sink (defaults to the module-global one).
     retry : `RetryPolicy` for the threaded prefetcher's transient-fault
         retries (None = the policy's defaults); attempts/aborts land in
@@ -98,6 +102,7 @@ class PageStream:
         staging_depth: int = 2,
         cache: DevicePageCache | None = None,
         cache_tag: str = "page",
+        cache_pin: bool = False,
         stats: TransferStats | None = None,
         retry: RetryPolicy | None = None,
         transport: Any | None = None,
@@ -111,6 +116,7 @@ class PageStream:
         self.staging_depth = max(1, staging_depth)
         self.cache = cache
         self.cache_tag = cache_tag
+        self.cache_pin = cache_pin
         self.stats = stats or GLOBAL_STATS
         self.retry = retry
         self.transport = transport
@@ -200,6 +206,7 @@ class PageStream:
                 self.stats.cache_hits += 1
                 self.stats.cache_hit_bytes += nbytes  # host bytes the hit saved
                 return StreamedPage(idx, host, dev)
+            self.stats.cache_misses += 1
         arr = self._to_array(host)
         t0 = time.perf_counter()
         if self.transport is not None:
@@ -214,7 +221,7 @@ class PageStream:
         self.stats.logical_bytes += arr.nbytes
         self.stats.wire_bytes += wire_nbytes
         if self.cache is not None:
-            self.cache.put(key, dev, wire_nbytes)
+            self.cache.put(key, dev, wire_nbytes, pinned=self.cache_pin)
         return StreamedPage(idx, host, dev)
 
     def __iter__(self) -> Iterator[StreamedPage]:

@@ -38,6 +38,16 @@ class ServeStats:
     predict_seconds: float = 0.0  # time inside the model call
     wall_seconds: float = 0.0  # first submit -> last delivery
     latencies_s: list[float] = dataclasses.field(default_factory=list)
+    # --- measured launch shapes (consumed by DeviceMemoryModel.serve_batch_rows
+    # to size forest tree-chunks from real traffic instead of the worst-case
+    # row page) ---
+    max_launch_rows: int = 0  # biggest padded launch shape seen
+    # --- residency ledger (filled by repro.serve.engine when it serves with a
+    # shared-budget DevicePageCache) ---
+    predicts: int = 0  # engine-level predict calls served
+    chunk_hits: int = 0  # forest tree-chunk launches served from residency
+    chunk_misses: int = 0  # forest tree-chunks that had to stage
+    h2d_bytes: int = 0  # host->device serving traffic (rows + chunks)
 
     def record_batch(self, n_rows: int, n_pad: int, predict_s: float,
                      latencies_s: Sequence[float]) -> None:
@@ -47,6 +57,17 @@ class ServeStats:
         self.predict_seconds += predict_s
         self.requests += len(latencies_s)
         self.latencies_s.extend(latencies_s)
+        self.max_launch_rows = max(self.max_launch_rows, n_rows + n_pad)
+
+    def record_residency(self, chunk_hits: int, chunk_misses: int,
+                         h2d_bytes: int) -> None:
+        """Book one engine predict's residency outcome (engine-side mirror of
+        `record_batch`): chunk-cache hits/misses and the h2d bytes the call
+        actually cost."""
+        self.predicts += 1
+        self.chunk_hits += chunk_hits
+        self.chunk_misses += chunk_misses
+        self.h2d_bytes += h2d_bytes
 
     def _quantile_ms(self, q: float) -> float:
         if not self.latencies_s:
@@ -71,10 +92,25 @@ class ServeStats:
     def rows_per_s(self) -> float:
         return self.rows / self.wall_seconds if self.wall_seconds > 0 else 0.0
 
+    @property
+    def chunk_hit_rate(self) -> float:
+        """Forest tree-chunk launches served from device residency (0..1)."""
+        total = self.chunk_hits + self.chunk_misses
+        return self.chunk_hits / total if total else 0.0
+
+    @property
+    def h2d_bytes_per_request(self) -> float:
+        """Host->device serving bytes amortized per request (per engine
+        predict when no batcher traffic has been recorded)."""
+        denom = self.requests or self.predicts
+        return self.h2d_bytes / denom if denom else 0.0
+
     def reset(self) -> None:
         self.requests = self.batches = self.rows = self.padded_rows = 0
         self.predict_seconds = self.wall_seconds = 0.0
         self.latencies_s = []
+        self.max_launch_rows = 0
+        self.predicts = self.chunk_hits = self.chunk_misses = self.h2d_bytes = 0
 
 
 class BatchServer:

@@ -115,6 +115,95 @@ def test_device_cache_byte_bound():
     assert cache.nbytes <= 25
 
 
+def test_device_cache_clear_resets_counters():
+    cache = DevicePageCache(max_pages=2)
+    cache.put("a", 1, 10)
+    cache.get("a")
+    cache.get("missing")
+    assert cache.hits == 1 and cache.misses == 1
+    cache.clear()
+    assert cache.hits == 0 and cache.misses == 0
+    assert cache.n_pages == 0 and cache.nbytes == 0
+    assert cache.pinned_pages == 0 and cache.pinned_bytes == 0
+    assert cache.hit_rate == 0.0
+
+
+def test_device_cache_oversize_put_rejected():
+    cache = DevicePageCache(max_pages=4, max_bytes=25)
+    cache.put("a", 1, 10)
+    # a single value bigger than the whole budget: refused up front (the old
+    # behavior admitted it then silently evicted it along with everything else)
+    assert not cache.put("big", 2, 26)
+    assert cache.get("big") is None
+    assert cache.get("a") == 1  # resident entries survive the refusal
+    assert cache.oversize_puts == 1
+    assert cache.put("b", 3, 10)  # budget-respecting puts still land
+
+
+def test_device_cache_pins_survive_pressure():
+    cache = DevicePageCache(max_pages=10, max_bytes=30)
+    assert cache.put("pin", "P", 10, pinned=True)
+    assert cache.is_pinned("pin")
+    # row-page pressure: unpinned entries churn, the pin never moves
+    for i in range(6):
+        cache.put(f"row{i}", i, 10)
+    assert cache.get("pin") == "P"
+    assert cache.nbytes <= 30
+    assert cache.pinned_bytes == 10
+    # the survivors are the most recent unpinned entries, not the oldest
+    assert cache.get("row0") is None and cache.get("row5") == 5
+
+
+def test_device_cache_unpin_releases_bytes():
+    cache = DevicePageCache(max_pages=10, max_bytes=30)
+    cache.put("a", 1, 15, pinned=True)
+    cache.put("b", 2, 15, pinned=True)
+    assert cache.pinned_bytes == 30
+    assert not cache.can_pin(1)  # budget exhausted by pins
+    cache.unpin("a")
+    assert cache.pinned_bytes == 15 and cache.can_pin(15)
+    # demoted entry is evictable again under pressure
+    cache.put("c", 3, 15)
+    assert cache.get("a") is None and cache.get("b") == 2
+
+
+def test_device_cache_pin_refuses_over_budget():
+    cache = DevicePageCache(max_pages=10, max_bytes=20)
+    cache.put("a", 1, 15, pinned=True)
+    cache.put("b", 2, 10)  # lands unpinned: pinning it would bust the budget
+    assert not cache.is_pinned("b")
+    assert not cache.pin("b")
+    assert not cache.pin("absent")
+    assert cache.pinned_bytes == 15
+
+
+def test_device_cache_max_bytes_none_matches_page_lru():
+    """max_bytes=None degenerates to the old page-count LRU bit-for-bit."""
+    ref = DevicePageCache(max_pages=2)
+    cache = DevicePageCache(max_pages=2, max_bytes=None)
+    for c in (ref, cache):
+        c.put("a", 1, 10)
+        c.put("b", 2, 10)
+        c.get("a")
+        c.put("c", 3, 10)
+    assert [k for k in ref._entries] == [k for k in cache._entries]
+    assert (ref.hits, ref.misses) == (cache.hits, cache.misses)
+    assert cache.get("b") is None
+    assert cache.get("a") == 1 and cache.get("c") == 3
+
+
+def test_device_cache_tag_counts():
+    cache = DevicePageCache(max_pages=8)
+    cache.put(("forest/2", 0), "f0", 10)
+    cache.put(("rows/0", 0), "r0", 10)
+    cache.lookup(("forest/2", 0))  # hit
+    cache.lookup(("forest/2", 1))  # miss
+    cache.lookup(("rows/0", 0))  # hit, different namespace
+    assert cache.tag_counts("forest") == (1, 1)
+    assert cache.tag_counts("rows") == (1, 0)
+    assert (cache.hits, cache.misses) == (2, 1)
+
+
 def test_cached_pass_skips_transfers():
     pages = [np.full(PAGE_SHAPE, i, np.uint8) for i in range(3)]
     stats = TransferStats()

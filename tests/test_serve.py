@@ -173,6 +173,138 @@ def test_memory_model_resolves_chunk(depthwise):
         resolve_trees_per_chunk(forest, 512, none_fits, None)
 
 
+# ------------------------------------------------- shared-budget residency
+@pytest.mark.parametrize("order", ["chunks_outer", "pages_outer"])
+def test_residency_pinned_bitwise_both_orders(depthwise, monkeypatch, order):
+    """Pinned chunks + shared budget stay bitwise with the resident forest in
+    BOTH loop orders, and move strictly fewer h2d bytes than the legacy
+    chunks x pages bill."""
+    import dataclasses
+
+    from repro.data.dmatrix import ArrayDMatrix
+    from repro.data.pages import TransferStats
+    from repro.serve import engine as engine_mod
+
+    X, _, booster = depthwise
+    forest = booster.packed_forest()
+    dm = ArrayDMatrix(X, max_bin=MAX_BIN, cuts=booster.cuts, page_bytes=2048)
+    resident = np.asarray(forest.predict_margin_bins(_bins(booster, X)))
+
+    legacy_stats = TransferStats()
+    legacy = predict_margin_dmatrix(
+        forest, dm, trees_per_chunk=2, pin_chunks=False, stats=legacy_stats
+    )
+    assert np.array_equal(legacy, resident)
+
+    orig_plan = engine_mod.plan_residency
+
+    def force(*args, **kw):
+        return dataclasses.replace(orig_plan(*args, **kw), order=order)
+
+    monkeypatch.setattr(engine_mod, "plan_residency", force)
+    stats = TransferStats()
+    sstats = ServeStats()
+    # budget = one worst-case row page + exactly two pinned chunks
+    per_chunk = 6 * 4 * 2 * forest.n_total
+    worst = max(nr for _, nr in dm.page_set().page_extents)
+    budget = worst * X.shape[1] + 2 * per_chunk
+    tuned = predict_margin_dmatrix(
+        forest, dm, trees_per_chunk=2, serve_budget_bytes=budget,
+        stats=stats, serve_stats=sstats,
+    )
+    assert np.array_equal(tuned, resident)  # bitwise, never allclose
+    assert sstats.chunk_hits > 0  # pinned chunks actually served from device
+    assert sstats.h2d_bytes == stats.host_to_device_bytes
+    assert stats.host_to_device_bytes < legacy_stats.host_to_device_bytes
+    assert 0.0 < stats.cache_hit_rate <= 1.0
+
+
+def test_residency_plan_order_and_pins():
+    from repro.serve.engine import plan_residency
+
+    # pins fill the budget minus the reserve, never past it
+    plan = plan_residency([100, 100, 100, 100], 50, 2, max_bytes=260, reserve_bytes=50)
+    assert plan.n_pinned == 2
+    assert plan.baseline_bytes == 400 + 4 * 50
+    # chunks outer: pinned prefix + first streamed chunk share one data pass
+    assert plan.bytes_chunks_outer == 400 + 2 * 50
+    assert plan.bytes_pages_outer == 50 + 200 + 2 * 200
+    assert plan.order == "chunks_outer"
+    # huge pages-side bill flips the order: re-staging two small remainder
+    # chunks per page beats re-streaming a giant matrix per chunk
+    flip = plan_residency([100, 100, 100, 100], 10_000, 2, max_bytes=260,
+                          reserve_bytes=50)
+    assert flip.order == "pages_outer"
+    # no budget = pin everything; pin=False pins nothing
+    assert plan_residency([100, 100], 50, 2, max_bytes=None).n_pinned == 2
+    assert plan_residency([100, 100], 50, 2, max_bytes=None, pin=False).n_pinned == 0
+
+
+def test_forest_server_cross_request_residency(depthwise):
+    """A ForestServer's pins persist across requests: the second request's
+    chunks serve entirely from device residency."""
+    X, _, booster = depthwise
+    forest = booster.packed_forest()
+    sstats = ServeStats()
+    per_chunk = 6 * 4 * 2 * forest.n_total
+    server = ForestServer(
+        booster, trees_per_chunk=2, serve_budget_bytes=4 * per_chunk,
+        serve_stats=sstats,
+    )
+    direct = booster.predict_margin(X)
+    assert np.array_equal(server.predict_margin(X), direct)
+    misses_first = sstats.chunk_misses
+    assert misses_first == 4  # every chunk staged exactly once
+    assert np.array_equal(server.predict_margin(X), direct)
+    assert sstats.chunk_misses == misses_first  # second request: zero staging
+    ledger = server.residency()
+    assert ledger["pinned_chunks"] == 4
+    assert ledger["chunk_hit_rate"] > 0.5
+    assert sstats.h2d_bytes_per_request > 0
+
+
+def test_measured_shape_chunk_sizing(depthwise):
+    """ServeStats occupancy history shrinks the batch term, so more trees fit
+    per chunk — observable as fewer chunk stages for the same budget."""
+    from repro.data.dmatrix import ArrayDMatrix
+    from repro.data.pages import TransferStats
+
+    X, _, booster = depthwise
+    forest = booster.packed_forest()
+    dm = ArrayDMatrix(X, max_bin=MAX_BIN, cuts=booster.cuts, page_bytes=512)
+    worst = max(nr for _, nr in dm.page_set().page_extents)
+    per_tree = (2 ** (MAX_DEPTH + 1) - 1) * 24
+    # budget fits 1 tree next to the worst-case page but 4 next to a
+    # measured 32-row launch
+    sizer = DeviceMemoryModel(num_features=X.shape[1])
+    model = DeviceMemoryModel(
+        hbm_bytes=sizer.serve_batch_bytes(worst) + per_tree,
+        num_features=X.shape[1], max_depth=MAX_DEPTH,
+    )
+    assert model.serve_batch_rows(worst) == worst
+    assert model.serve_batch_rows(worst, 32) == 32
+    assert model.max_trees_resident(32, MAX_DEPTH) == 4
+    assert model.max_trees_resident(worst, MAX_DEPTH) == 1
+
+    resident = np.asarray(forest.predict_margin_bins(_bins(booster, X)))
+    worst_case = ServeStats()
+    out = predict_margin_dmatrix(
+        forest, dm, model=model, stats=TransferStats(), serve_stats=worst_case
+    )
+    assert np.array_equal(out, resident)
+    measured = ServeStats()
+    measured.record_batch(32, 0, 0.0, [1e-3])  # max_launch_rows = 32
+    out = predict_margin_dmatrix(
+        forest, dm, model=model, stats=TransferStats(), serve_stats=measured
+    )
+    assert np.array_equal(out, resident)
+    # 8 trees / 4 per chunk = 2 stages; worst-case sizing chunks per tree
+    # (and its order model re-stages chunks per page: strictly more traffic)
+    assert measured.chunk_misses == 2
+    assert worst_case.chunk_misses > measured.chunk_misses
+    assert measured.h2d_bytes < worst_case.h2d_bytes
+
+
 def test_empty_forest_chunk_passthrough():
     from repro.kernels import ops
 
